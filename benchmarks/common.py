@@ -1,0 +1,94 @@
+"""Shared benchmark workload acquisition: datasets, VD-Zip indices, calibrated
+efSearch (paper operating point: recall@10 >= 0.9), search traces, sims."""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import graph as gmod
+from repro.core import vdzip
+from repro.data.synthetic import make_dataset, recall_at_k
+from repro.ndpsim import SimFlags, simulate_ndp, simulate_platform
+from repro.ndpsim.timing import NASZIP_2CH
+from repro.utils import cache_path
+
+BENCH_DATASETS = ("sift", "gist", "bigann", "glove", "wiki", "msmarco")
+FAST = os.environ.get("BENCH_FAST", "0") == "1"
+N_QUERIES = 96 if FAST else 256
+EF_GRID = (16, 24, 32, 48, 64, 96, 128, 192, 256)
+
+
+@functools.lru_cache(maxsize=None)
+def get_index(name: str, dfloat: bool = True):
+    db = make_dataset(name)
+    idx = vdzip.build(db, m=16, seg=16 if db.dim % 16 == 0 else db.dim // 10,
+                      dfloat_recall_target=0.9 if dfloat else None,
+                      dfloat_proxy=True, cache_key=name)
+    return db, idx
+
+
+@functools.lru_cache(maxsize=None)
+def calibrated_ef(name: str, target: float = 0.9, use_fee: bool = True,
+                  use_dfloat: bool = True) -> int:
+    """Smallest ef on the grid reaching recall@10 >= target."""
+    p = cache_path(f"ef/{name}/{target}/{use_fee}/{use_dfloat}/v2", ".json")
+    if p.exists():
+        return json.loads(p.read_text())["ef"]
+    db, idx = get_index(name)
+    ef_pick = EF_GRID[-1]
+    for ef in EF_GRID:
+        res = vdzip.evaluate(idx, db, ef=ef, k=10, use_fee=use_fee,
+                             use_dfloat=use_dfloat, trace=False)
+        if res["recall"] >= target:
+            ef_pick = ef
+            break
+    p.write_text(json.dumps(dict(ef=ef_pick)))
+    return ef_pick
+
+
+@functools.lru_cache(maxsize=None)
+def get_traces(name: str, ef: int = 0, use_fee: bool = True,
+               use_dfloat: bool = True, n_queries: int = 0):
+    db, idx = get_index(name)
+    ef = ef or calibrated_ef(name, use_fee=use_fee, use_dfloat=use_dfloat)
+    q = db.queries[: (n_queries or N_QUERIES)]
+    out = idx.search(q, ef=ef, k=10, use_fee=use_fee, use_dfloat=use_dfloat,
+                     trace=True)
+    rec = recall_at_k(out["ids"], db.gt[: len(q)], 10)
+    return db, idx, out, ef, rec
+
+
+def ndp_sim(name: str, flags: SimFlags | None = None, hw=NASZIP_2CH,
+            use_fee=True, use_dfloat=True, ef=0, owner_policy="shuffle",
+            n_queries: int = 0):
+    db, idx, out, ef, rec = get_traces(name, ef=ef, use_fee=use_fee,
+                                       use_dfloat=use_dfloat,
+                                       n_queries=n_queries)
+    owner = gmod.map_owners(db.n, hw.n_subchannels, owner_policy)
+    from repro.core.dfloat import fp32_config
+    cfg = idx.dfloat_cfg if use_dfloat else fp32_config(db.dim)
+    r = simulate_ndp(out["trace"], owner, idx.graph.base_adjacency, hw,
+                     flags or SimFlags(), cfg, idx.seg)
+    return r, rec, ef
+
+
+class Csv:
+    """Collect `name,us_per_call,derived` rows for benchmarks.run."""
+
+    def __init__(self):
+        self.rows = []
+
+    def timed(self, name, fn):
+        t0 = time.perf_counter()
+        derived = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        self.rows.append((name, us, derived))
+        return derived
+
+    def emit(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.0f},{derived}")

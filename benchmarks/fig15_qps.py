@@ -1,0 +1,67 @@
+"""Fig. 15/16/17: throughput (QPS) and energy across platforms at
+recall@10 >= 0.9, normalized to the CPU baseline.
+
+NasZip-2ch vs: cpu-baseline (HNSW), cpu-scann, ANNA (ASIC), PIMANN (UPMEM),
+DF-GAS (FPGA), NDP-baseline (no opts), ANSMET-like (plain-FEE NDP).
+Fig. 16 adds NasZip-6ch vs CPU-HP and GPU-CAGRA.
+"""
+from benchmarks.common import BENCH_DATASETS, get_traces, ndp_sim
+from repro.ndpsim import SimFlags, simulate_platform
+from repro.ndpsim import timing as T
+
+
+def platform_rows(name: str):
+    db, idx, out, ef, rec = get_traces(name, use_fee=True, use_dfloat=True)
+    db2, idx2, out_nofee, _, _ = get_traces(name, use_fee=False, use_dfloat=False)
+    rows = {}
+    rows["cpu-baseline"] = simulate_platform(out_nofee["trace"], db.dim, T.CPU_BASELINE)
+    rows["cpu-scann"] = simulate_platform(out_nofee["trace"], db.dim, T.CPU_SCANN,
+                                          bytes_per_feature=1.0)
+    rows["cpu-hp"] = simulate_platform(out_nofee["trace"], db.dim, T.CPU_HP,
+                                       bytes_per_feature=1.0)
+    rows["gpu-cagra"] = simulate_platform(out_nofee["trace"], db.dim, T.GPU_A100)
+    rows["anna-asic"] = simulate_platform(out_nofee["trace"], db.dim, T.ANNA_ASIC,
+                                          bytes_per_feature=1.0)
+    rows["pimann"] = simulate_platform(out_nofee["trace"], db.dim, T.PIMANN_UPMEM)
+    rows["dfgas"] = simulate_platform(out_nofee["trace"], db.dim, T.DFGAS_FPGA,
+                                      bytes_per_feature=2.0)
+    # NDP variants (trace-driven cycle model)
+    rows["ndp-baseline"], _, _ = ndp_sim(name, SimFlags(dam=False, lnc=False, prefetch=False),
+                                         use_fee=False, use_dfloat=False)
+    rows["ansmet-like"], _, _ = ndp_sim(name, SimFlags(dam=False, lnc=False, prefetch=True),
+                                        use_fee=True, use_dfloat=False, ef=0)
+    rows["naszip-2ch"], _, _ = ndp_sim(name, SimFlags())
+    rows["naszip-6ch"], _, _ = ndp_sim(name, SimFlags(), hw=T.NASZIP_6CH)
+    return rows, rec, ef
+
+
+def main(csv):
+    print("\n== Fig.15/16: QPS normalized to cpu-baseline (recall@10>=0.9) ==")
+    keys = ["cpu-baseline", "cpu-scann", "anna-asic", "pimann", "dfgas",
+            "ndp-baseline", "ansmet-like", "naszip-2ch", "cpu-hp", "gpu-cagra",
+            "naszip-6ch"]
+    print(f"{'dataset':9s} " + " ".join(f"{k:>12s}" for k in keys))
+    geo = {k: 1.0 for k in keys}
+    n = 0
+    for name in BENCH_DATASETS:
+        def run(name=name):
+            rows, rec, ef = platform_rows(name)
+            base = rows["cpu-baseline"].qps
+            norm = {k: rows[k].qps / base for k in keys}
+            print(f"{name:9s} " + " ".join(f"{norm[k]:12.2f}" for k in keys))
+            return {k: round(norm[k], 2) for k in
+                    ("naszip-2ch", "ansmet-like", "gpu-cagra", "cpu-scann")}
+        out = csv.timed(f"fig15_{name}", run)
+        rows, _, _ = platform_rows(name)
+        for k in keys:
+            geo[k] *= rows[k].qps / rows["cpu-baseline"].qps
+        n += 1
+    print(f"{'geomean':9s} " + " ".join(f"{geo[k] ** (1 / n):12.2f}" for k in keys))
+    print("\n== Fig.17: energy efficiency (queries/J) normalized to cpu-baseline ==")
+    for name in BENCH_DATASETS:
+        rows, _, _ = platform_rows(name)
+        base_e = rows["cpu-baseline"].energy_uj_per_query
+        vals = {k: base_e / max(rows[k].energy_uj_per_query, 1e-12) for k in keys}
+        print(f"{name:9s} " + " ".join(f"{vals[k]:12.2f}" for k in keys))
+        csv.rows.append((f"fig17_{name}", 0.0,
+                         {k: round(vals[k], 2) for k in ("naszip-2ch", "ansmet-like")}))

@@ -1,0 +1,26 @@
+"""Fig. 18: query latency breakdown — neighbor-list retrieval / distance
+computation / partial-result processing — NDP variants, normalized to NasZip."""
+from benchmarks.common import BENCH_DATASETS, ndp_sim
+from repro.ndpsim import SimFlags
+
+
+def main(csv):
+    print("\n== Fig.18: latency breakdown (us/query), normalized to naszip ==")
+    print(f"{'dataset':9s} {'variant':13s} {'total':>8s} {'nbr%':>6s} {'dist%':>6s} "
+          f"{'part%':>6s} {'x-naszip':>9s}")
+    for name in BENCH_DATASETS[:4]:
+        def run(name=name):
+            nz, _, _ = ndp_sim(name, SimFlags())
+            an, _, _ = ndp_sim(name, SimFlags(dam=False, lnc=False, prefetch=True),
+                               use_fee=True, use_dfloat=False)
+            nb, _, _ = ndp_sim(name, SimFlags(dam=False, lnc=False, prefetch=False),
+                               use_fee=False, use_dfloat=False)
+            out = {}
+            for label, r in (("naszip", nz), ("ansmet-like", an), ("ndp-baseline", nb)):
+                b = r.breakdown()
+                print(f"{name:9s} {label:13s} {r.avg_latency_us:8.1f} "
+                      f"{b['neighbor']*100:5.1f}% {b['distance']*100:5.1f}% "
+                      f"{b['partial']*100:5.1f}% {r.avg_latency_us/nz.avg_latency_us:9.2f}")
+                out[label] = round(r.avg_latency_us / nz.avg_latency_us, 2)
+            return out
+        csv.timed(f"fig18_{name}", run)

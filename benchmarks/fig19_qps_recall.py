@@ -1,0 +1,24 @@
+"""Fig. 19: throughput vs recall (efSearch sweep) — NasZip vs NDP baseline."""
+from benchmarks.common import ndp_sim
+from repro.ndpsim import SimFlags
+
+EFS = (16, 32, 64, 128, 256)
+DATASETS = ("sift", "gist")
+
+
+def main(csv):
+    print("\n== Fig.19: QPS vs recall (efSearch sweep) ==")
+    for name in DATASETS:
+        def run(name=name):
+            curve = []
+            for ef in EFS:
+                nz, rec, _ = ndp_sim(name, SimFlags(), ef=ef, n_queries=96)
+                nb, rec_b, _ = ndp_sim(name, SimFlags(dam=False, lnc=False, prefetch=False),
+                                       use_fee=False, use_dfloat=False, ef=ef,
+                                       n_queries=96)
+                curve.append((ef, round(rec, 3), int(nz.qps), int(nb.qps)))
+                print(f"{name:6s} ef={ef:4d} recall={rec:.3f} "
+                      f"naszip={nz.qps:9.0f} ndp-base={nb.qps:9.0f} "
+                      f"speedup={nz.qps/max(nb.qps,1):.2f}x")
+            return curve
+        csv.timed(f"fig19_{name}", run)

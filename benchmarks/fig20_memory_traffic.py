@@ -1,0 +1,64 @@
+"""Fig. 20: memory traffic per query of DB-compression methods on HNSW at
+recall@10 >= 0.9, normalized to plain HNSW (fp32, no early exit).
+
+PQ must weaken compression (more sub-quantizers) to reach high recall;
+RaBitQ filters with 1-bit codes but re-ranks survivors with full vectors;
+VD-Zip cuts both dims (FEE-sPCA) and bits/feature (Dfloat)."""
+import numpy as np
+
+from benchmarks.common import get_index, get_traces
+from repro.core import baselines as bl
+from repro.data.synthetic import recall_at_k
+
+DATASETS = ("sift", "msmarco")
+
+
+def pq_traffic(db, idx, gt_ids, queries, target=0.9):
+    """Bytes/query for PQ re-ranked search at the recall target."""
+    for n_sub in (db.dim // 16, db.dim // 8, db.dim // 4, db.dim // 2):
+        pq = bl.fit_pq(idx.db_rot, n_sub, db.metric, iters=4, sample=4000)
+        qs = idx.transform_queries(queries)
+        recs, n_rerank = [], 40
+        for qi in range(len(qs)):
+            cand = np.arange(db.n)
+            d = bl.pq_distances(pq, qs[qi], cand)
+            top = cand[np.argsort(d)[:n_rerank]]
+            exact = ((idx.db_rot[top] - qs[qi]) ** 2).sum(-1) if db.metric == "l2" \
+                else -(idx.db_rot[top] @ qs[qi])
+            found = top[np.argsort(exact)[:10]]
+            recs.append(len(set(found.tolist()) & set(gt_ids[qi, :10].tolist())) / 10)
+        rec = float(np.mean(recs))
+        if rec >= target:
+            bytes_q = db.n * n_sub + n_rerank * db.dim * 4   # codes + rerank
+            return bytes_q, rec, n_sub
+    return db.n * n_sub + n_rerank * db.dim * 4, rec, n_sub
+
+
+def main(csv):
+    print("\n== Fig.20: memory traffic normalized to HNSW-fp32 ==")
+    for name in DATASETS:
+        def run(name=name):
+            db, idx, out, ef, rec = get_traces(name, use_fee=True, use_dfloat=True,
+                                               n_queries=64)
+            _, _, out_plain, _, _ = get_traces(name, use_fee=False, use_dfloat=False,
+                                               n_queries=64)
+            n_eval_plain = (out_plain["trace"]["nbrs"] >= 0).sum() / 64
+            hnsw_bytes = n_eval_plain * db.dim * 4
+            # VD-Zip: bursts touched per eval (Dfloat+FEE)
+            segs = out["trace"]["segs"]
+            bursts = 0
+            for s in np.unique(segs[segs > 0]):
+                bursts += (segs == s).sum() * idx.dfloat_cfg.bursts_for_prefix(int(s) * idx.seg)
+            vdzip_bytes = bursts * 64 / 64       # 64B per burst group, per query
+            # RaBitQ-lite: 1-bit scan of evaluated candidates + rerank 3*k
+            rq = bl.fit_rabitq(idx.db_rot, db.metric)
+            rbq_bytes = n_eval_plain * (db.dim / 8 + 8) + 30 * db.dim * 4
+            pq_bytes, pq_rec, n_sub = pq_traffic(db, idx, db.gt, db.queries[:24])
+            base = hnsw_bytes
+            print(f"{name:9s} hnsw=1.00  pq={pq_bytes/base:.2f} (m={n_sub}, "
+                  f"rec={pq_rec:.2f})  rabitq~={rbq_bytes/base:.2f}  "
+                  f"vdzip={vdzip_bytes/base:.2f} (recall={rec:.3f})")
+            return dict(pq=round(pq_bytes / base, 2),
+                        rabitq=round(rbq_bytes / base, 2),
+                        vdzip=round(vdzip_bytes / base, 2))
+        csv.timed(f"fig20_{name}", run)

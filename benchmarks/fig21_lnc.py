@@ -1,0 +1,51 @@
+"""Fig. 21: (a) LNC-D hit rate vs efSearch for several capacities;
+(b) prefetch hit rate vs hop depth for several graph densities M."""
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import get_index, get_traces
+from repro.core import graph as gmod, vdzip
+from repro.ndpsim import SimFlags, simulate_ndp
+from repro.ndpsim.timing import NASZIP_2CH
+
+
+def main(csv):
+    print("\n== Fig.21a: LNC-D hit rate vs efSearch x capacity (sift) ==")
+    name = "sift"
+    db, idx = get_index(name)
+    owner = gmod.map_owners(db.n, NASZIP_2CH.n_subchannels, "shuffle")
+
+    def run_a():
+        out = {}
+        for cap_kb in (32, 64, 128, 256):
+            hw = dataclasses.replace(NASZIP_2CH, lnc_d_bytes=cap_kb * 1024)
+            row = []
+            for ef in (16, 32, 64, 128):
+                o = idx.search(db.queries[:96], ef=ef, k=10, use_fee=True, trace=True)
+                r = simulate_ndp(o["trace"], owner, idx.graph.base_adjacency, hw,
+                                 SimFlags(), idx.dfloat_cfg, idx.seg)
+                row.append((ef, round(r.lnc_d_hit, 3)))
+            out[f"{cap_kb}KB"] = row
+            print(f"  {cap_kb:4d}KB: " + "  ".join(f"ef{e}={h:.3f}" for e, h in row))
+        return out
+    csv.timed("fig21a_lnc_capacity", run_a)
+
+    print("\n== Fig.21b: prefetch hit rate vs hop, by graph density M ==")
+
+    def run_b():
+        out = {}
+        for m in (8, 16, 32):
+            idx_m = vdzip.build(db, m=m, seg=idx.seg, dfloat_recall_target=None,
+                                cache_key=f"{name}-m{m}")
+            o = idx_m.search(db.queries[:96], ef=48, k=10, use_fee=True, trace=True)
+            r = simulate_ndp(o["trace"], owner, idx_m.graph.base_adjacency,
+                             NASZIP_2CH, SimFlags(), idx_m.dfloat_cfg, idx.seg)
+            byhop = r.prefetch_hit_by_hop
+            pts = [(h, round(float(byhop[h]), 3)) for h in
+                   range(0, min(len(byhop), 60), 10)]
+            out[f"M={m}"] = dict(overall=round(r.prefetch_hit, 3), by_hop=pts)
+            print(f"  M={m:2d}: overall={r.prefetch_hit:.3f}  " +
+                  " ".join(f"h{h}={v}" for h, v in pts))
+        return out
+    csv.timed("fig21b_prefetch_by_hop", run_b)

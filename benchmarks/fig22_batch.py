@@ -1,0 +1,37 @@
+"""Fig. 22/23: batch-size trade-off (QPS vs latency vs prefetch miss) and
+sub-channel workload balance (idle fraction), incl. the unshuffled-'wiki'
+mapping case."""
+from benchmarks.common import BENCH_DATASETS, get_index, get_traces, ndp_sim
+from repro.ndpsim import SimFlags
+
+
+def main(csv):
+    print("\n== Fig.22: batch-size sweep (sift) ==")
+
+    def run_22():
+        rows = []
+        for b in (1, 4, 16, 48):
+            r, rec, _ = ndp_sim("sift", SimFlags(batch=b))
+            rows.append(dict(batch=b, qps=int(r.qps),
+                             lat_us=round(r.avg_latency_us, 1),
+                             pf_miss=round(1 - r.prefetch_hit, 3)))
+            print(f"  batch={b:3d} qps={r.qps:9.0f} lat={r.avg_latency_us:8.1f}us "
+                  f"pf_miss={1-r.prefetch_hit:.3f} idle={r.idle_frac:.3f}")
+        return rows
+    csv.timed("fig22_batch_sweep", run_22)
+
+    print("\n== Fig.23: idle fraction of earliest-finishing sub-channel ==")
+
+    def run_23():
+        out = {}
+        for name in ("sift", "bigann", "wiki"):
+            policy = "contiguous" if name == "wiki" else "shuffle"
+            row = []
+            for b in (1, 16, 48):
+                r, _, _ = ndp_sim(name, SimFlags(batch=b), owner_policy=policy)
+                row.append((b, round(r.idle_frac, 3)))
+            out[f"{name}({policy})"] = row
+            print(f"  {name:8s}[{policy:10s}]: " +
+                  "  ".join(f"b{b}={v}" for b, v in row))
+        return out
+    csv.timed("fig23_balance", run_23)

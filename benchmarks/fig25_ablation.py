@@ -1,0 +1,39 @@
+"""Fig. 25: cumulative latency reduction per NasZip technique, from the NDP
+baseline: +FEE-sPCA -> +Dfloat -> +DaM -> +LNC -> +prefetch."""
+from benchmarks.common import ndp_sim
+from repro.ndpsim import SimFlags
+
+STEPS = [
+    ("ndp-baseline", dict(use_fee=False, use_dfloat=False),
+     SimFlags(dam=False, lnc=False, prefetch=False)),
+    ("+FEE-sPCA", dict(use_fee=True, use_dfloat=False),
+     SimFlags(dam=False, lnc=False, prefetch=False)),
+    ("+Dfloat", dict(use_fee=True, use_dfloat=True),
+     SimFlags(dam=False, lnc=False, prefetch=False)),
+    ("+DaM", dict(use_fee=True, use_dfloat=True),
+     SimFlags(dam=True, lnc=False, prefetch=False)),
+    ("+LNC", dict(use_fee=True, use_dfloat=True),
+     SimFlags(dam=True, lnc=True, prefetch=False)),
+    ("+prefetch", dict(use_fee=True, use_dfloat=True),
+     SimFlags(dam=True, lnc=True, prefetch=True)),
+]
+
+
+def main(csv):
+    print("\n== Fig.25: ablation — cumulative latency reduction ==")
+    for name in ("sift", "gist"):
+        def run(name=name):
+            base = None
+            out = []
+            for label, tr_kw, flags in STEPS:
+                r, rec, _ = ndp_sim(name, flags, **tr_kw)
+                if base is None:
+                    base = r.avg_latency_us
+                out.append(dict(step=label, rel_latency=round(r.avg_latency_us / base, 3),
+                                dist_us=round(r.t_distance_us, 1),
+                                nondist_us=round(r.t_neighbor_us + r.t_partial_us, 1)))
+                print(f"  {name:6s} {label:13s} lat={r.avg_latency_us:9.1f}us "
+                      f"({r.avg_latency_us/base*100:5.1f}%) dist={r.t_distance_us:8.1f} "
+                      f"nondist={r.t_neighbor_us + r.t_partial_us:8.1f}")
+            return out
+        csv.timed(f"fig25_{name}", run)

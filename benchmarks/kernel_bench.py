@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: VPE fee_distance + Dfloat unpack wall time
+(jnp fast path vs Pallas interpret validation path) and bytes-saved model."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dfloat as dfl
+from repro.kernels import ops
+
+
+def _time(fn, *args, n=5, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main(csv):
+    print("\n== Kernel micro-benchmarks ==")
+    rng = np.random.default_rng(0)
+    for c, d, seg in ((1024, 128, 16), (512, 960, 32)):
+        s = d // seg
+        q = jnp.asarray(rng.standard_normal(d), jnp.float32)
+        x = jnp.asarray(rng.standard_normal((c, d)), jnp.float32)
+        a = jnp.asarray(1 + 1 / np.arange(1, s + 1), jnp.float32)
+        ones = jnp.ones(s, jnp.float32)
+        thr = jnp.float32(d * 0.8)
+
+        def run_jnp():
+            return _time(ops.fee_distance, q, x, thr, a, ones, ones * 0,
+                         seg=seg, metric="l2", backend="jnp")
+        us = csv.timed(f"kernel_fee_jnp_{c}x{d}", run_jnp)
+        print(f"  fee_distance jnp     {c}x{d}: {us:9.1f} us")
+
+        def run_pallas():
+            return _time(ops.fee_distance, q, x, thr, a, ones, ones * 0,
+                         seg=seg, metric="l2", backend="pallas", n=1)
+        us2 = csv.timed(f"kernel_fee_pallas_interp_{c}x{d}", run_pallas)
+        print(f"  fee_distance pallas(interp) {c}x{d}: {us2:9.1f} us  "
+              f"[interpret mode = correctness target, not speed]")
+
+    x = (rng.standard_normal((512, 128)) * 3).astype(np.float32)
+    cfg = dfl.make_config(128, [(18, 6, 42), (14, 5, 32), (16, 5, 54)], x)
+    packed = dfl.pack_db(x, cfg)
+    pj = jnp.asarray(packed)
+
+    def run_unpack():
+        return _time(lambda p: ops.dfloat_unpack(p, cfg, backend="jnp"), pj, n=3)
+    us = csv.timed("kernel_dfloat_unpack_512x128", run_unpack)
+    comp = cfg.total_bits() / (128 * 32)
+    print(f"  dfloat_unpack 512x128: {us:9.1f} us; bits ratio {comp:.2f} "
+          f"({cfg.bursts_per_vector()} vs {dfl.fp32_config(128).bursts_per_vector()} bursts)")

@@ -1,0 +1,47 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+MODULES = [
+    "benchmarks.fig05_feature_usage",
+    "benchmarks.fig08_fee_spca",
+    "benchmarks.fig15_qps",
+    "benchmarks.fig18_latency",
+    "benchmarks.fig19_qps_recall",
+    "benchmarks.fig20_memory_traffic",
+    "benchmarks.fig21_lnc",
+    "benchmarks.fig22_batch",
+    "benchmarks.fig25_ablation",
+    "benchmarks.table4_pca_overhead",
+    "benchmarks.kernel_bench",
+    "benchmarks.roofline",
+]
+
+
+def main() -> None:
+    import importlib
+
+    from benchmarks.common import Csv
+
+    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    csv = Csv()
+    for mod_name in MODULES:
+        if only and not any(o in mod_name for o in only):
+            continue
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.main(csv)
+        except Exception:  # noqa: BLE001 — keep the harness running
+            print(f"[bench ERROR] {mod_name}")
+            traceback.print_exc()
+            csv.rows.append((mod_name.split(".")[-1] + "_ERROR", 0.0, "failed"))
+    print("\n==== CSV (name,us_per_call,derived) ====")
+    csv.emit()
+
+
+if __name__ == "__main__":
+    main()

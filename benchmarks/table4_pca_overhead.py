@@ -1,0 +1,33 @@
+"""Table IV: offline PCA preprocessing time and online query-transform
+latency (as a fraction of search latency)."""
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_DATASETS, get_index, ndp_sim
+from repro.core import pca as pca_mod
+from repro.ndpsim import SimFlags
+
+
+def main(csv):
+    print("\n== Table IV: PCA preprocessing overhead ==")
+    print(f"{'dataset':10s} {'N x D':>14s} {'offline (s)':>12s} "
+          f"{'online (us/q)':>14s} {'overhead %':>11s}")
+    for name in BENCH_DATASETS:
+        def run(name=name):
+            db, idx = get_index(name)
+            t0 = time.perf_counter()
+            pca_mod.fit_spca(db.vectors, db.metric)
+            offline = time.perf_counter() - t0
+            q = db.queries[:256]
+            t0 = time.perf_counter()
+            for _ in range(4):
+                idx.transform_queries(q)
+            online_us = (time.perf_counter() - t0) / (4 * len(q)) * 1e6
+            r, _, _ = ndp_sim(name, SimFlags())
+            pct = online_us / max(r.avg_latency_us, 1e-9) * 100
+            print(f"{name:10s} {f'{db.n}x{db.dim}':>14s} {offline:12.2f} "
+                  f"{online_us:14.2f} {pct:10.2f}%")
+            return dict(offline_s=round(offline, 2), online_us=round(online_us, 2),
+                        overhead_pct=round(pct, 2))
+        csv.timed(f"table4_{name}", run)

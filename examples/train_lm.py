@@ -1,0 +1,34 @@
+"""Train a ~100M-class LM for a few hundred steps with the full stack:
+microbatch accumulation, checkpointing, resume.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--devices 4]
+
+This drives repro.launch.train with a scaled llama config (the example
+deliverable: an end-to-end training driver on the public API).
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+
+    from repro.launch import train
+
+    argv = ["--arch", "llama3.2-1b", "--smoke", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128", "--microbatch", "2",
+            "--ckpt-dir", args.ckpt, "--ckpt-every", "50", "--resume"]
+    if args.devices:
+        argv += ["--devices", str(args.devices), "--mesh", f"1x{args.devices}"]
+    train.main(argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Compression baselines the paper compares against (Fig. 20).
+
+* PQ (product quantization, Jégou'11): k-means codebooks per sub-space, ADC
+  lookup distances.  High compression but lossy -> needs weak compression at
+  high recall, i.e. more memory traffic (the paper's point).
+* RaBitQ-lite (Gao & Long'24, simplified): 1-bit sign code of the centered,
+  rotated vector + per-vector norm; used as a *filter* whose survivors are
+  re-ranked with exact full-dimension distances (so memory traffic = code
+  bytes + rerank full-vector bytes, matching the paper's accounting).
+* FLAT: exact full-precision scan of candidates (HNSW baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+# ------------------------------- PQ ----------------------------------------
+
+
+@dataclasses.dataclass
+class PQ:
+    codebooks: np.ndarray   # (n_sub, 256, d_sub)
+    codes: np.ndarray       # (N, n_sub) uint8
+    d_sub: int
+    metric: str
+
+    @property
+    def bits_per_vector(self) -> int:
+        return self.codes.shape[1] * 8
+
+
+def fit_pq(db: np.ndarray, n_sub: int, metric: str = "l2", iters: int = 8,
+           seed: int = 0, sample: int = 20000) -> PQ:
+    n, d = db.shape
+    assert d % n_sub == 0
+    d_sub = d // n_sub
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(n, min(sample, n), replace=False)
+    books = np.empty((n_sub, 256, d_sub), np.float32)
+    codes = np.empty((n, n_sub), np.uint8)
+    for s in range(n_sub):
+        x = db[idx, s * d_sub : (s + 1) * d_sub]
+        c = x[rng.choice(len(x), 256, replace=len(x) < 256)].copy()
+        for _ in range(iters):  # lloyd
+            d2 = ((x[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+            a = d2.argmin(1)
+            for j in range(256):
+                m = a == j
+                if m.any():
+                    c[j] = x[m].mean(0)
+        books[s] = c
+        full = db[:, s * d_sub : (s + 1) * d_sub]
+        d2 = ((full[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+        codes[:, s] = d2.argmin(1).astype(np.uint8)
+    return PQ(books, codes, d_sub, metric)
+
+
+def pq_distances(pq: PQ, query: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """ADC: one table build per query, then code lookups."""
+    n_sub = pq.codebooks.shape[0]
+    qs = query.reshape(n_sub, pq.d_sub)
+    if pq.metric == "l2":
+        tab = ((pq.codebooks - qs[:, None, :]) ** 2).sum(-1)      # (n_sub, 256)
+    else:
+        tab = -(pq.codebooks * qs[:, None, :]).sum(-1)
+    c = pq.codes[ids]                                             # (C, n_sub)
+    return tab[np.arange(n_sub)[None, :], c].sum(-1)
+
+
+# ---------------------------- RaBitQ-lite -----------------------------------
+
+
+@dataclasses.dataclass
+class RaBitQ:
+    rotation: np.ndarray     # (D, D) random orthogonal
+    center: np.ndarray       # (D,)
+    signs: np.ndarray        # (N, D) packed as uint8 bits -> (N, D//8)
+    norms: np.ndarray        # (N,) residual norms
+    ip_unit: np.ndarray      # (N,) <residual_unit, sign_unit> correction factor
+    metric: str
+
+    @property
+    def bits_per_vector(self) -> int:
+        return self.signs.shape[1] * 8 + 64  # code + norm/correction scalars
+
+
+def fit_rabitq(db: np.ndarray, metric: str = "l2", seed: int = 0) -> RaBitQ:
+    n, d = db.shape
+    rng = np.random.default_rng(seed)
+    rot = np.linalg.qr(rng.standard_normal((d, d)))[0].astype(np.float32)
+    center = db.mean(0) if metric == "l2" else np.zeros(d, np.float32)
+    res = (db - center) @ rot
+    norms = np.linalg.norm(res, axis=1) + 1e-12
+    unit = res / norms[:, None]
+    signs_pm = np.sign(res)
+    signs_pm[signs_pm == 0] = 1.0
+    ip_unit = (unit * (signs_pm / np.sqrt(d))).sum(1)   # E ~ 0.8/sqrt(1) factor
+    bits = (signs_pm > 0).astype(np.uint8)
+    packed = np.packbits(bits, axis=1)
+    return RaBitQ(rot, center.astype(np.float32), packed, norms.astype(np.float32),
+                  ip_unit.astype(np.float32), metric)
+
+
+def rabitq_estimate(rq: RaBitQ, query: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Estimated distance from the 1-bit code (the filter stage)."""
+    d = rq.rotation.shape[0]
+    qr = (query - rq.center) @ rq.rotation
+    qn = np.linalg.norm(qr) + 1e-12
+    bits = np.unpackbits(rq.signs[ids], axis=1)[:, :d].astype(np.float32)
+    s = (bits * 2 - 1) / np.sqrt(d)                      # sign unit code
+    ip_code = s @ qr                                     # <code, q>
+    # <o_unit, q> ~ ip_code / <o_unit, code>  (RaBitQ's unbiased estimator)
+    ip_est = ip_code / np.maximum(rq.ip_unit[ids], 1e-3)
+    if rq.metric == "l2":
+        return rq.norms[ids] ** 2 + qn**2 - 2 * rq.norms[ids] * ip_est * 1.0 \
+            + 2 * (0.0)  # centered both sides
+    return -(ip_est * rq.norms[ids])

@@ -1,0 +1,71 @@
+"""Feature-level early exiting with statistics-based PCA (FEE-sPCA, paper §IV-A).
+
+Functional (jit-able) semantics of the online search step in Fig. 6: distances
+are accumulated segment by segment (one segment = one DRAM-burst group on the
+NDP, one VMEM feature block on TPU); after segment k the estimated full
+distance
+
+    est_k = alpha_k * part_k / beta_k - margin_k
+
+is compared with the beam threshold; the first segment where est_k >= threshold
+rejects the candidate and stops its remaining feature traffic.
+
+This module is the pure-jnp oracle shared by the search loop and by
+``kernels/ref.py``; the Pallas kernel in ``kernels/fee_distance.py`` implements
+the same contract with block-level DMA skipping.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+BIG = jnp.float32(3.0e38)
+
+
+@partial(jax.jit, static_argnames=("seg", "metric"))
+def fee_distance(q, x, threshold, alpha, beta, margin, *, seg: int, metric: str = "l2"):
+    """FEE-sPCA distance of candidates ``x`` (C, D) against query ``q`` (D,).
+
+    Returns (score, rejected, segs_used):
+      score     (C,) full score (squared L2 / negated IP) — exact for survivors
+      rejected  (C,) bool, True if early exit triggered before the last segment
+      segs_used (C,) int32, number of segments actually touched (memory model)
+    """
+    c, d = x.shape
+    s = d // seg
+    if metric == "l2":
+        per = ((x - q[None, :]) ** 2).reshape(c, s, seg).sum(-1)
+    elif metric == "ip":
+        per = -(x * q[None, :]).reshape(c, s, seg).sum(-1)
+    else:
+        raise ValueError(metric)
+    cum = jnp.cumsum(per, axis=1)                              # (C, S) partial scores
+    est = alpha[None, :] * cum / beta[None, :] - margin[None, :]
+    # exits are only meaningful strictly before the final segment: at the final
+    # segment the full score is available anyway.
+    exit_mask = est[:, : s - 1] >= threshold                   # (C, S-1)
+    any_exit = exit_mask.any(axis=1)
+    first_exit = jnp.argmax(exit_mask, axis=1)                 # first True (0 if none)
+    segs_used = jnp.where(any_exit, first_exit + 1, s).astype(jnp.int32)
+    full = cum[:, -1]
+    return full, any_exit, segs_used
+
+
+@partial(jax.jit, static_argnames=("metric",))
+def exact_distance(q, x, *, metric: str = "l2"):
+    if metric == "l2":
+        return ((x - q[None, :]) ** 2).sum(-1)
+    return -(x @ q)
+
+
+def make_fee_params(spca, beta_fit: dict):
+    """Bundle device arrays for the online searcher."""
+    return dict(
+        alpha=jnp.asarray(beta_fit["alpha"]),
+        beta=jnp.asarray(beta_fit["beta"]),
+        margin=jnp.asarray(beta_fit["margin"]),
+        seg=int(beta_fit["seg"]),
+        metric=beta_fit["metric"],
+    )

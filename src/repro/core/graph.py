@@ -1,0 +1,209 @@
+"""Graph index construction (HNSW-style hierarchy over a pruned kNN base).
+
+Index construction is one-time (paper §II-A); search dominates.  We build a
+CAGRA-style base layer — exact kNN graph + optional RNG/occlusion pruning
+(the construction CAGRA/NSG use, convertible to HNSW form per §II-A2) — plus
+HNSW-style sparse upper layers for entry-point routing.
+
+Also defines the DaM partitioning (paper §V-C2): given a node->sub-channel
+ownership map, each sub-channel stores for *every* node the sub-list of its
+neighbors that the sub-channel owns, indexed by a per-channel NLT.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.utils import cached_npz
+
+
+@dataclasses.dataclass
+class GraphIndex:
+    levels: list          # list of (node_ids (Nl,), adjacency (Nl, M) int32 into node_ids-local space)
+    entry: int            # entry node id (global) = levels[-1].node_ids[0]
+    m: int
+
+    @property
+    def base_adjacency(self) -> np.ndarray:
+        return self.levels[0][1]
+
+    @property
+    def n(self) -> int:
+        return self.levels[0][1].shape[0]
+
+
+def _knn_adjacency(vectors: np.ndarray, m: int, metric: str, block: int = 4096) -> np.ndarray:
+    n = vectors.shape[0]
+    adj = np.empty((n, m), np.int32)
+    sq = (vectors**2).sum(1)
+    for s in range(0, n, block):
+        e = min(s + block, n)
+        dot = vectors[s:e] @ vectors.T
+        if metric == "l2":
+            scores = sq[s:e, None] + sq[None, :] - 2 * dot
+        else:
+            scores = -dot
+        scores[np.arange(e - s), np.arange(s, e)] = np.inf  # no self loops
+        idx = np.argpartition(scores, m - 1, axis=1)[:, :m]
+        row = np.arange(e - s)[:, None]
+        order = np.argsort(scores[row, idx], axis=1)
+        adj[s:e] = idx[row, order]
+    return adj
+
+
+def _occlusion_prune(vectors: np.ndarray, adj: np.ndarray, metric: str,
+                     keep: int, block: int = 2048) -> np.ndarray:
+    """RNG-style pruning (NSG/CAGRA heuristic): drop neighbor j of p if an
+    already-kept closer neighbor l occludes it, i.e. d(l, j) < d(p, j).
+    Vectorized over node blocks; adjacency stays fixed-width (pad = -1 then
+    backfill with unpruned extras)."""
+    n, m = adj.shape
+    out = np.full((n, keep), -1, np.int32)
+    for s in range(0, n, block):
+        e = min(s + block, n)
+        nb = vectors[adj[s:e]]                      # (b, M, D)
+        p = vectors[s:e][:, None, :]
+        if metric == "l2":
+            d_pj = ((nb - p) ** 2).sum(-1)          # (b, M) sorted ascending
+            d_ll = ((nb[:, :, None, :] - nb[:, None, :, :]) ** 2).sum(-1)
+        else:
+            d_pj = -(nb * p).sum(-1)
+            d_ll = -np.einsum("bmd,bnd->bmn", nb, nb)
+        b = e - s
+        kept = np.zeros((b, m), bool)
+        kept[:, 0] = True
+        for j in range(1, m):
+            # occluded if any kept l<j (closer to p) with d(l,j) < d(p,j)
+            occ = (kept[:, :j] & (d_ll[:, :j, j] < d_pj[:, j : j + 1])).any(1)
+            kept[:, j] = ~occ
+        for bi in range(b):
+            sel = adj[s + bi][kept[bi]][:keep]
+            if len(sel) < keep:  # backfill with nearest pruned ones
+                extra = adj[s + bi][~kept[bi]][: keep - len(sel)]
+                sel = np.concatenate([sel, extra])
+            out[s + bi, : len(sel)] = sel
+    return out
+
+
+def _add_long_edges(adj: np.ndarray, rng, n_long: int) -> np.ndarray:
+    """NSW-style random long-range links: guarantees navigability on
+    clustered data, where pure kNN graphs fragment into cluster islands."""
+    n = adj.shape[0]
+    longs = rng.integers(0, n, (n, n_long)).astype(np.int32)
+    longs[longs == np.arange(n)[:, None]] = (longs[longs == np.arange(n)[:, None]] + 1) % n
+    return np.concatenate([adj, longs], axis=1)
+
+
+def build_graph(vectors: np.ndarray, m: int = 16, metric: str = "l2",
+                prune: bool = True, upper_branch: int = 24,
+                cache_key: str | None = None, seed: int = 0,
+                long_edges: int | None = None) -> GraphIndex:
+    n_long = max(2, m // 4) if long_edges is None else long_edges
+
+    def _build():
+        rng = np.random.default_rng(seed)
+        n = vectors.shape[0]
+        base = _knn_adjacency(vectors, 2 * m if prune else m, metric)
+        if prune:
+            base = _occlusion_prune(vectors, base, metric, m)
+            base = np.where(base < 0, base[:, :1], base)  # pad with nearest
+        base = _add_long_edges(base, rng, n_long)
+        out = {"adj0": base, "ids0": np.arange(n, dtype=np.int32)}
+        # HNSW-style upper layers: geometric subsampling, kNN within layer
+        ids = np.arange(n)
+        lvl = 1
+        while len(ids) > 4 * upper_branch:
+            ids = np.sort(rng.choice(ids, max(len(ids) // 16, upper_branch), replace=False))
+            ml = min(m, len(ids) - 1)
+            adj = _knn_adjacency(vectors[ids], ml, metric)
+            adj = _add_long_edges(adj, rng, min(n_long, len(ids) - 1))
+            out[f"adj{lvl}"] = adj.astype(np.int32)
+            out[f"ids{lvl}"] = ids.astype(np.int32)
+            lvl += 1
+        return out
+
+    if cache_key is not None:
+        data = cached_npz(f"graph/{cache_key}/m{m}/{metric}/p{prune}/l{n_long}/v4", _build)
+    else:
+        data = _build()
+    levels = []
+    lvl = 0
+    while f"adj{lvl}" in data:
+        levels.append((data[f"ids{lvl}"], data[f"adj{lvl}"]))
+        lvl += 1
+    entry = int(levels[-1][0][0])
+    return GraphIndex(levels=levels, entry=entry, m=m)
+
+
+# ---------------------------------------------------------------------------
+# DaM — data-aware neighbor-list mapping (paper §V-C2, Fig. 12)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DaMPartition:
+    """Per-sub-channel partitioned index.
+
+    owner[v]            sub-channel owning vector v
+    local_ids[c]        global ids owned by channel c (its vector shard order)
+    local_of[v]         position of v within its owner's shard
+    part_adj[c]         (N, Mc) int32: for EVERY node v, the members of v's
+                        neighbor list owned by channel c, as LOCAL slots into
+                        channel c's vector shard; -1 padded.  This is the
+                        NLT+partitioned-list structure of Fig. 12 in dense,
+                        fixed-width (shard_map-able) form.
+    """
+    n_channels: int
+    owner: np.ndarray
+    local_ids: list
+    local_of: np.ndarray
+    part_adj: list
+
+    def max_part_width(self) -> int:
+        return max(a.shape[1] for a in self.part_adj)
+
+
+def map_owners(n: int, n_channels: int, policy: str = "shuffle", seed: int = 0,
+               assign_hint: np.ndarray | None = None) -> np.ndarray:
+    """Vector->sub-channel ownership.
+
+    shuffle    round-robin over a random permutation (paper §VI-C7: datasets
+               are shuffled for balance)
+    contiguous block partition (the unshuffled 'Wiki' case — preserves
+               insertion locality, worse balance)
+    """
+    if policy == "shuffle":
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(n)
+        owner = np.empty(n, np.int32)
+        owner[perm] = np.arange(n) % n_channels
+        return owner
+    if policy == "contiguous":
+        return (np.arange(n) * n_channels // n).astype(np.int32)
+    raise ValueError(policy)
+
+
+def build_dam(adj: np.ndarray, owner: np.ndarray, n_channels: int,
+              pad_width: int | None = None) -> DaMPartition:
+    n, m = adj.shape
+    local_ids = [np.where(owner == c)[0].astype(np.int32) for c in range(n_channels)]
+    local_of = np.empty(n, np.int64)
+    for c, ids in enumerate(local_ids):
+        local_of[ids] = np.arange(len(ids))
+    nb_owner = owner[adj]                                    # (N, M)
+    width = pad_width or int(max(1, (nb_owner == np.arange(n_channels)[:, None, None]).sum(2).max()))
+    part_adj = []
+    for c in range(n_channels):
+        mask = nb_owner == c
+        pa = np.full((n, width), -1, np.int32)
+        rows, cols = np.nonzero(mask)
+        # stable position within row
+        pos = np.zeros(len(rows), np.int64)
+        if len(rows):
+            change = np.r_[True, rows[1:] != rows[:-1]]
+            idx_start = np.flatnonzero(change)
+            pos = np.arange(len(rows)) - np.repeat(np.arange(len(rows))[idx_start], np.diff(np.r_[idx_start, len(rows)]))
+        pa[rows, pos] = local_of[adj[rows, cols]]
+        part_adj.append(pa)
+    return DaMPartition(n_channels, owner.astype(np.int32), local_ids, local_of, part_adj)

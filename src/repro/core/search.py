@@ -1,0 +1,187 @@
+"""GANNS beam search (HNSW §II-A3) as a pure-JAX program.
+
+Two variants share one hop body:
+  * ``while``  — lax.while_loop, early-terminating (fast path / deployment)
+  * ``scan``   — fixed hop budget, emits a per-hop trace consumed by the
+                 DIMM-NDP performance model (``repro.ndpsim``)
+
+Semantics follow Fig. 1: a size-``ef`` candidate priority queue (sorted beam);
+each hop expands the nearest unexpanded entry, gathers its (fixed-width)
+neighbor list, computes FEE-sPCA distances against the current threshold
+(= farthest beam entry), and merge-sorts survivors into the beam.  A visited
+bitmap prevents re-evaluation.  Early-exited candidates are visited but not
+inserted — this is exactly the recall/compute trade the paper's beta corrects.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fee as fee_mod
+
+BIG = jnp.float32(3.0e38)
+
+
+@dataclasses.dataclass
+class SearchConfig:
+    ef: int = 64
+    k: int = 10
+    metric: str = "l2"
+    seg: int = 16               # FEE checkpoint granularity (features / access)
+    max_hops: int = 0           # 0 -> auto (4*ef)
+    use_fee: bool = False
+
+    def hops(self):
+        return self.max_hops or 4 * self.ef
+
+
+def _dedup_mask(ids):
+    """True for the first occurrence of each id within the (small) list."""
+    m = ids.shape[0]
+    eq = ids[:, None] == ids[None, :]
+    earlier = jnp.tril(eq, k=-1).any(axis=1)
+    return ~earlier
+
+
+def _hop_body(state, vectors, adj, q, fee_params, cfg: SearchConfig):
+    beam_ids, beam_d, expanded, visited = state
+    ef = beam_ids.shape[0]
+    active = (~expanded) & (beam_d < BIG)
+    done = ~active.any()
+    i = jnp.argmin(jnp.where(active, beam_d, BIG))
+    node = beam_ids[i]
+    expanded = expanded.at[i].set(True)
+
+    nbrs = adj[jnp.maximum(node, 0)]                       # (M,)
+    valid = (nbrs >= 0) & ~done
+    safe = jnp.maximum(nbrs, 0)
+    w = safe >> 5
+    bit = (jnp.uint32(1) << (safe & 31).astype(jnp.uint32))
+    seen = (visited[w] & bit) != 0
+    fresh = valid & ~seen & _dedup_mask(safe)
+    visited = visited.at[w].add(jnp.where(fresh, bit, jnp.uint32(0)))
+
+    threshold = beam_d[-1]
+    tgt = vectors[safe]                                    # (M, D) gather
+    if cfg.use_fee:
+        score, rejected, segs_used = fee_mod.fee_distance(
+            q, tgt, threshold, fee_params["alpha"], fee_params["beta"],
+            fee_params["margin"], seg=cfg.seg, metric=cfg.metric)
+    else:
+        score = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
+        rejected = jnp.zeros_like(valid)
+        segs_used = jnp.full(nbrs.shape, tgt.shape[1] // cfg.seg, jnp.int32)
+
+    cand_d = jnp.where(fresh & ~rejected, score, BIG)
+    all_ids = jnp.concatenate([beam_ids, safe])
+    all_d = jnp.concatenate([beam_d, cand_d])
+    all_exp = jnp.concatenate([expanded, jnp.zeros_like(fresh)])
+    order = jnp.argsort(all_d)[:ef]
+    beam_ids, beam_d = all_ids[order], all_d[order]
+    expanded = all_exp[order] | (beam_d >= BIG)
+
+    trace = dict(
+        node=jnp.where(done, -1, node).astype(jnp.int32),
+        nbrs=jnp.where(fresh, nbrs, -1).astype(jnp.int32),
+        segs=jnp.where(fresh, segs_used, 0).astype(jnp.int32),
+        cand_d=cand_d,                                   # BIG unless accepted
+        n_eval=fresh.sum().astype(jnp.int32),
+        dims=(jnp.where(fresh, segs_used, 0).sum() * cfg.seg).astype(jnp.int32),
+    )
+    return (beam_ids, beam_d, expanded, visited), trace
+
+
+def _init_state(q, entry, vectors, cfg: SearchConfig, n_words):
+    ef = cfg.ef
+    d0 = fee_mod.exact_distance(q, vectors[entry][None, :], metric=cfg.metric)[0]
+    beam_ids = jnp.full((ef,), -1, jnp.int32).at[0].set(entry)
+    beam_d = jnp.full((ef,), BIG, jnp.float32).at[0].set(d0)
+    expanded = jnp.ones((ef,), bool).at[0].set(False)
+    visited = jnp.zeros((n_words,), jnp.uint32)
+    visited = visited.at[entry >> 5].set(jnp.uint32(1) << (entry & 31).astype(jnp.uint32))
+    return beam_ids, beam_d, expanded, visited
+
+
+def make_searcher(vectors, adj, cfg: SearchConfig, fee_params=None, trace: bool = False):
+    """Returns search(queries (Q,D), entries (Q,)) -> dict of results.
+
+    vectors/adj may be numpy; they are closed over as jnp constants.
+    """
+    vectors = jnp.asarray(vectors)
+    adj = jnp.asarray(adj, jnp.int32)
+    n = vectors.shape[0]
+    n_words = -(-n // 32)
+    fee_params = fee_params or {}
+    fp = {k: jnp.asarray(v) for k, v in fee_params.items() if k in ("alpha", "beta", "margin")}
+
+    def search_one(q, entry):
+        state = _init_state(q, entry, vectors, cfg, n_words)
+        if trace:
+            def step(s, _):
+                s, t = _hop_body(s, vectors, adj, q, fp, cfg)
+                return s, t
+            state, traces = jax.lax.scan(step, state, None, length=cfg.hops())
+        else:
+            def cond(s):
+                _, beam_d, expanded, _ = s
+                return ((~expanded) & (beam_d < BIG)).any()
+            def body(s):
+                s, _ = _hop_body(s, vectors, adj, q, fp, cfg)
+                return s
+            state = jax.lax.while_loop(cond, body, state)
+            traces = None
+        beam_ids, beam_d, _, _ = state
+        out = dict(ids=beam_ids[: cfg.k], dists=beam_d[: cfg.k])
+        if trace:
+            out["trace"] = traces
+            out["hops"] = (traces["node"] >= 0).sum()
+            out["n_eval"] = traces["n_eval"].sum()
+            out["dims"] = traces["dims"].sum()
+        return out
+
+    return jax.jit(jax.vmap(search_one))
+
+
+def descend_entry(vectors, graph, queries, metric: str) -> np.ndarray:
+    """Greedy top-down routing through HNSW upper layers -> base entry ids."""
+    entries = np.full(len(queries), graph.entry, np.int64)
+    for ids, adj in reversed(graph.levels[1:]):
+        vecs_l = jnp.asarray(vectors[ids])
+        adj_l = jnp.asarray(adj, jnp.int32)
+        pos = {int(g): i for i, g in enumerate(ids)}
+        cur = np.array([pos.get(int(e), 0) for e in entries], np.int32)
+
+        @jax.jit
+        def greedy(q, c):
+            def cond(s):
+                c, d, moved = s
+                return moved
+            def body(s):
+                c, d, _ = s
+                nb = adj_l[c]
+                nd = fee_mod.exact_distance(q, vecs_l[nb], metric=metric)
+                j = jnp.argmin(nd)
+                better = nd[j] < d
+                return (jnp.where(better, nb[j], c), jnp.minimum(nd[j], d), better)
+            d0 = fee_mod.exact_distance(q, vecs_l[c][None], metric=metric)[0]
+            c, _, _ = jax.lax.while_loop(cond, body, (c, d0, jnp.bool_(True)))
+            return c
+
+        cur = np.asarray(jax.vmap(greedy)(jnp.asarray(queries), jnp.asarray(cur)))
+        entries = ids[cur]
+    return entries.astype(np.int32)
+
+
+def run_search(vecdb_vectors, graph, queries, cfg: SearchConfig,
+               fee_params=None, trace: bool = False):
+    """Convenience wrapper: descend to base entries, run base-layer search."""
+    entries = descend_entry(vecdb_vectors, graph, queries, cfg.metric)
+    searcher = make_searcher(vecdb_vectors, graph.base_adjacency, cfg,
+                             fee_params=fee_params, trace=trace)
+    out = searcher(jnp.asarray(queries), jnp.asarray(entries))
+    return {k: np.asarray(v) if not isinstance(v, dict) else {kk: np.asarray(vv) for kk, vv in v.items()}
+            for k, v in out.items()}

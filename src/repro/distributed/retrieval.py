@@ -1,0 +1,201 @@
+"""NasZip retrieval as a shard_map program over the production mesh.
+
+This is the paper's DaM (Fig. 12) mapped onto a TPU pod (DESIGN.md §4):
+
+  * the vector DB is row-sharded over the ``model`` axis — one shard = one
+    "sub-channel"; its HBM slice plays the role of the sub-channel DRAM;
+  * the adjacency is stored PRE-PARTITIONED BY OWNER: shard c holds, for
+    every node v, the sub-list of v's neighbors that shard c owns (as local
+    slot ids).  Expanding v therefore needs no vector movement — every shard
+    gathers + scores only its local partition (the NLT analogue is the dense
+    per-shard row indexing);
+  * per-hop merge = all_gather of (global_id, dist) pairs (C x Mc tiny) +
+    identical replicated beam update on every shard — the paper's shared
+    priority queue / host merge, reduced to a tiny collective;
+  * queries are sharded over the ``data`` axes (query batches = the paper's
+    batch scheduler).
+
+The visited set is a hashed bitmap (exact when 2^bits >= N, Bloom-style with
+negligible false-visit rate at billion scale) so the state is O(1) in DB size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import fee as fee_mod
+from repro.core.search import SearchConfig, _dedup_mask
+
+BIG = jnp.float32(3.0e38)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedDB:
+    """Abstract or concrete device-side DaM database layout.
+
+    vectors   (C, n_loc, d)   row shards (axis 0 = model shard)
+    local_ids (C, n_loc)      global id of each local slot
+    part_adj  (C, N, Mc)      per-shard neighbor partitions (local slots, -1 pad)
+    """
+    vectors: object
+    local_ids: object
+    part_adj: object
+
+    @property
+    def n_total(self) -> int:
+        return self.part_adj.shape[1]
+
+
+def abstract_db(n: int, d: int, n_shards: int, m_part: int, dtype=jnp.float32) -> ShardedDB:
+    """ShapeDtypeStruct stand-in for the multi-pod dry-run (no allocation)."""
+    n_loc = -(-n // n_shards)
+    return ShardedDB(
+        vectors=jax.ShapeDtypeStruct((n_shards, n_loc, d), dtype),
+        local_ids=jax.ShapeDtypeStruct((n_shards, n_loc), jnp.int32),
+        part_adj=jax.ShapeDtypeStruct((n_shards, n, m_part), jnp.int32),
+    )
+
+
+def build_sharded_db(vectors: np.ndarray, dam, dtype=jnp.float32) -> ShardedDB:
+    """Pack a core.graph.DaMPartition into the stacked device layout."""
+    c = dam.n_channels
+    n_loc = max(len(ids) for ids in dam.local_ids)
+    d = vectors.shape[1]
+    vs = np.zeros((c, n_loc, d), np.float32)
+    ids = np.full((c, n_loc), -1, np.int32)
+    for ch, gl in enumerate(dam.local_ids):
+        vs[ch, : len(gl)] = vectors[gl]
+        ids[ch, : len(gl)] = gl
+    pa = np.stack(dam.part_adj)  # (C, N, Mc)
+    return ShardedDB(jnp.asarray(vs, dtype), jnp.asarray(ids), jnp.asarray(pa))
+
+
+def db_shardings(mesh: Mesh):
+    model = "model" if "model" in mesh.axis_names else mesh.axis_names[-1]
+    return ShardedDB(
+        vectors=NamedSharding(mesh, P(model, None, None)),
+        local_ids=NamedSharding(mesh, P(model, None)),
+        part_adj=NamedSharding(mesh, P(model, None, None)),
+    )
+
+
+def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
+                          fee_params=None, n_bits_log2: int = 23):
+    """Returns search(db: ShardedDB, queries (Q, d), entries (Q,)) — a jit'd
+    shard_map program for ``mesh`` (axes: optional pod, data, model)."""
+    model_axis = "model" if "model" in mesh.axis_names else mesh.axis_names[-1]
+    data_axes = tuple(n for n in mesh.axis_names if n != model_axis)
+    fee_params = fee_params or {}
+    fp = {k: jnp.asarray(v) for k, v in fee_params.items()
+          if k in ("alpha", "beta", "margin")}
+    n_bits = min(1 << n_bits_log2, 1 << int(np.ceil(np.log2(max(n_total, 2)))))
+    n_words = n_bits // 32
+    mask_bits = n_bits - 1
+
+    def hop(state, vec_loc, ids_loc, padj_loc, q):
+        beam_ids, beam_d, expanded, visited = state
+        ef = beam_ids.shape[0]
+        active = (~expanded) & (beam_d < BIG)
+        done = ~active.any()
+        i = jnp.argmin(jnp.where(active, beam_d, BIG))
+        v = beam_ids[i]
+        expanded = expanded.at[i].set(True)
+
+        # local partition of v's neighbor list (the DaM lookup — per-shard NLT)
+        slots = padj_loc[jnp.maximum(v, 0)]                 # (Mc,) local slots
+        valid = (slots >= 0) & ~done
+        gids = jnp.where(valid, ids_loc[jnp.maximum(slots, 0)], -1)
+
+        # visited bitmap check (replicated, identical across shards)
+        hidx = (jnp.maximum(gids, 0) & mask_bits)
+        w = hidx >> 5
+        bit = jnp.uint32(1) << (hidx & 31).astype(jnp.uint32)
+        seen = (visited[w] & bit) != 0
+        fresh = valid & ~seen & _dedup_mask(jnp.maximum(gids, 0))
+
+        threshold = beam_d[-1]
+        tgt = vec_loc[jnp.maximum(slots, 0)]                # (Mc, d) local gather
+        if cfg.use_fee:
+            score, rejected, _segs = fee_mod.fee_distance(
+                q, tgt, threshold, fp["alpha"], fp["beta"], fp["margin"],
+                seg=cfg.seg, metric=cfg.metric)
+        else:
+            score = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
+            rejected = jnp.zeros_like(valid)
+        cand_d = jnp.where(fresh & ~rejected, score, BIG)
+
+        # ---- the tiny merge: all_gather (id, dist) pairs over the DB axis
+        all_ids = jax.lax.all_gather(gids, model_axis).reshape(-1)
+        all_d = jax.lax.all_gather(cand_d, model_axis).reshape(-1)
+
+        # replicated visited/beam update (identical on every shard)
+        ah = (jnp.maximum(all_ids, 0) & mask_bits)
+        aw, abit = ah >> 5, jnp.uint32(1) << (ah & 31).astype(jnp.uint32)
+        take = (all_ids >= 0) & ((visited[aw] & abit) == 0) & _dedup_mask(jnp.maximum(all_ids, 0))
+        visited = visited.at[aw].add(jnp.where(take, abit, jnp.uint32(0)))
+        all_d = jnp.where(take, all_d, BIG)
+
+        cat_ids = jnp.concatenate([beam_ids, all_ids])
+        cat_d = jnp.concatenate([beam_d, all_d])
+        cat_e = jnp.concatenate([expanded, jnp.zeros_like(take)])
+        order = jnp.argsort(cat_d)[:ef]
+        beam_ids, beam_d = cat_ids[order], cat_d[order]
+        expanded = cat_e[order] | (beam_d >= BIG)
+        return beam_ids, beam_d, expanded, visited
+
+    def search_one(vec_loc, ids_loc, padj_loc, q, entry):
+        d0 = fee_mod.exact_distance(
+            q, _entry_vec(vec_loc, ids_loc, entry), metric=cfg.metric)[0]
+        beam_ids = jnp.full((cfg.ef,), -1, jnp.int32).at[0].set(entry)
+        beam_d = jnp.full((cfg.ef,), BIG).at[0].set(d0)
+        expanded = jnp.ones((cfg.ef,), bool).at[0].set(False)
+        visited = jnp.zeros((n_words,), jnp.uint32)
+        h = entry & mask_bits
+        visited = visited.at[h >> 5].set(jnp.uint32(1) << (h & 31).astype(jnp.uint32))
+        state = (beam_ids, beam_d, expanded, visited)
+
+        def cond(s):
+            return ((~s[2]) & (s[1] < BIG)).any()
+
+        state = jax.lax.while_loop(
+            cond, lambda s: hop(s, vec_loc, ids_loc, padj_loc, q), state)
+        return state[0][: cfg.k], state[1][: cfg.k]
+
+    def _entry_vec(vec_loc, ids_loc, entry):
+        """Entry vector lives on one shard; fetch via masked psum (tiny)."""
+        n_loc = vec_loc.shape[0]
+        slot = jnp.argmax(ids_loc == entry)
+        mine = (ids_loc[slot] == entry)
+        v = jnp.where(mine, vec_loc[slot], 0.0)
+        return jax.lax.psum(v, model_axis)[None]
+
+    def body(vectors, local_ids, part_adj, queries, entries):
+        # block shapes: vectors (1, n_loc, d); queries (Q_loc, d)
+        vec_loc, ids_loc, padj_loc = vectors[0], local_ids[0], part_adj[0]
+        ids, dists = jax.vmap(
+            lambda q, e: search_one(vec_loc, ids_loc, padj_loc, q, e)
+        )(queries, entries)
+        return ids, dists
+
+    dp = data_axes if len(data_axes) > 1 else data_axes[0]
+    mapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(model_axis, None, None), P(model_axis, None),
+                  P(model_axis, None, None), P(dp, None), P(dp)),
+        out_specs=(P(dp, None), P(dp, None)),
+        check_vma=False,
+    )
+
+    jitted = jax.jit(mapped)
+
+    def search(db: ShardedDB, queries, entries):
+        return jitted(db.vectors, db.local_ids, db.part_adj, queries, entries)
+
+    search.lower = lambda db, queries, entries: jitted.lower(
+        db.vectors, db.local_ids, db.part_adj, queries, entries)
+    return search

@@ -1,0 +1,168 @@
+"""Sharding rules: param/opt/cache/batch PartitionSpecs for any mesh.
+
+Baseline scheme (DESIGN.md §6):
+  * TP (Megatron): head/ffn/expert contraction dims over ``model``
+  * FSDP (ZeRO-3): the other big dim over the data axes (pod+data flattened)
+  * EP: experts over ``model``
+  * decode KV caches: sequence axis over ``model`` (flash-decoding LSE merge)
+  * batch over the data axes
+
+Rules are path-keyed so the same function covers dense/MoE/SSM/hybrid/enc-dec
+param trees.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axes(mesh: Mesh):
+    names = mesh.axis_names
+    model = "model" if "model" in names else names[-1]
+    dp = tuple(n for n in names if n != model)
+    return (dp if len(dp) > 1 else (dp[0] if dp else None)), model
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _divisible(shape, axis, mesh, axis_name) -> bool:
+    if axis_name is None:
+        return False
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = (np.prod([sizes[a] for a in axis_name]) if isinstance(axis_name, tuple)
+         else sizes[axis_name])
+    return shape[axis] % n == 0
+
+
+def _spec_for_param(path: str, x, dp, model, mesh, mode: str) -> P:
+    r = x.ndim
+    shape = x.shape
+
+    def ok(axis, name):
+        return _divisible(shape, axis, mesh, name)
+
+    serve = mode == "serve"
+    # stacked group/layer axis first for block params (paths contain 'blocks')
+    if "embed" in path:
+        return P(model if ok(0, model) else None,
+                 None if serve else (dp if ok(1, dp) else None))
+    if path.endswith("head"):
+        return P(None if serve else (dp if ok(0, dp) else None),
+                 model if ok(1, model) else None)
+    if r <= 2 and ("norm" in path or "bias" in path.lower() or
+                   path.endswith(("a_log", "d_skip", "dt_bias", "bq", "bk", "bv", "conv_b"))):
+        return P(*([None] * r))
+    if "moe" in path and r == 4:                 # (G, E, D, F) / (G, E, F, D)
+        if serve:
+            # serving: experts over dp (EP across the whole mesh), inner dim
+            # over model — weights live in their use layout, no regathering
+            big = 2 if shape[2] >= shape[3] else 3
+            spec = [None, dp if ok(1, dp) else None, None, None]
+            spec[big] = model if ok(big, model) else None
+            return P(*spec)
+        return P(None, model if ok(1, model) else None, dp if ok(2, dp) else None, None)
+    if "router" in path:                         # (G, D, E)
+        return P(None, None if serve else (dp if ok(1, dp) else None), None)
+    if "conv_w" in path:                         # (G, k, P)
+        return P(None, None, model if ok(2, model) else None)
+    if r == 3:                                   # (G, in, out) block matmuls
+        _, din, dout = shape
+        if din >= dout:                          # wq/wk/wv/wi/wg/in_proj: D -> model-sharded out
+            return P(None, None if serve else (dp if ok(1, dp) else None),
+                     model if ok(2, model) else None)
+        return P(None, model if ok(1, model) else None,
+                 None if serve else (dp if ok(2, dp) else None))
+    if r == 2:                                   # unstacked matmul (whisper head-like)
+        return P(None if serve else (dp if ok(0, dp) else None),
+                 model if ok(1, model) else None)
+    return P(*([None] * r))
+
+
+def param_specs(abstract_params, mesh: Mesh, mode: str = "train"):
+    """mode="train": FSDP(dp)+TP(model) storage.  mode="serve": TP/EP-only
+    storage (use layout) — serving has no optimizer state to shard away."""
+    dp, model = mesh_axes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: _spec_for_param(_path_str(path), x, dp, model, mesh, mode),
+        abstract_params)
+
+
+def opt_specs(abstract_opt, pspecs, mesh: Mesh):
+    """Optimizer state mirrors param sharding; factored moments drop an axis."""
+    dp, model = mesh_axes(mesh)
+
+    def spec(path, x):
+        ps = _path_str(path)
+        if ps.endswith("step"):
+            return P()
+        # strip the leading "mu/", "nu/" or "v/" and trailing vr/vc/v
+        parts = ps.split("/")
+        tail = parts[-1]
+        core = "/".join(parts[1:-1] if tail in ("vr", "vc", "v") else parts[1:])
+        ref = _get_by_path(pspecs, core)
+        if ref is None:
+            return P(*([None] * x.ndim))
+        if tail == "vr":
+            return P(*ref[:-1])
+        if tail == "vc":
+            return P(*(tuple(ref[:-2]) + (ref[-1],)))
+        return ref
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_opt)
+
+
+def _get_by_path(tree, path: str):
+    cur = tree
+    for part in path.split("/"):
+        if isinstance(cur, dict) and part in cur:
+            cur = cur[part]
+        else:
+            return None
+    return cur if isinstance(cur, P) else None
+
+
+def cache_specs(abstract_cache, mesh: Mesh):
+    dp, model = mesh_axes(mesh)
+
+    def spec(path, x):
+        ps = _path_str(path)
+        if ps.endswith("pos"):
+            return P()
+        if x.ndim == 5 and ("/k" in ps or "/v" in ps or "cross" in ps):
+            # (G, B, S, K, dh): batch over data, sequence over model
+            s_ok = _divisible(x.shape, 2, mesh, model)
+            b_ok = _divisible(x.shape, 1, mesh, dp)
+            return P(None, dp if b_ok else None, model if s_ok else None, None, None)
+        if x.ndim == 5 and "ssm" in ps:          # (G, B, H, S, dh): heads over model
+            h_ok = _divisible(x.shape, 2, mesh, model)
+            b_ok = _divisible(x.shape, 1, mesh, dp)
+            return P(None, dp if b_ok else None, model if h_ok else None, None, None)
+        if x.ndim == 4 and "conv" in ps:         # (G, B, k-1, P)
+            b_ok = _divisible(x.shape, 1, mesh, dp)
+            p_ok = _divisible(x.shape, 3, mesh, model)
+            return P(None, dp if b_ok else None, None, model if p_ok else None)
+        b_ok = x.ndim >= 1 and _divisible(x.shape, min(1, x.ndim - 1), mesh, dp)
+        return P(*([None] * x.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_cache)
+
+
+def batch_specs(abstract_batch, mesh: Mesh):
+    dp, model = mesh_axes(mesh)
+
+    def spec(path, x):
+        if x.ndim == 0:
+            return P()
+        if _divisible(x.shape, 0, mesh, dp):
+            return P(dp, *([None] * (x.ndim - 1)))
+        return P(*([None] * x.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_batch)
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,98 @@
+"""Mesh-agnostic checkpointing: save/restore of arbitrary pytrees.
+
+Design (DESIGN.md §7):
+  * arrays are saved in their GLOBAL logical shape (device_get gathers
+    shards), so a checkpoint written on a 256-chip mesh restores onto 4
+    chips or 512 — this is what makes elastic scaling trivial;
+  * atomic: write into ``<dir>.tmp`` then rename;
+  * async: the serialize+write runs on a writer thread (training continues);
+  * manifest carries step + user metadata for restart logic.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(ckpt_dir: str | Path, step: int, tree, metadata: dict | None = None,
+         async_write: bool = False) -> threading.Thread | None:
+    ckpt_dir = Path(ckpt_dir)
+    flat, _ = _flatten(tree)
+    host, dtypes = {}, {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        dtypes[k] = str(a.dtype)
+        if a.dtype.kind == "V" or "bfloat16" in str(a.dtype):
+            a = a.view(np.uint16)       # npz can't store ml_dtypes.bfloat16
+        host[k] = a
+
+    def _write():
+        tmp = ckpt_dir.with_suffix(".tmp")
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **host)
+        (tmp / "manifest.json").write_text(json.dumps(dict(
+            step=step, keys=sorted(host), dtypes=dtypes, metadata=metadata or {})))
+        if ckpt_dir.exists():
+            shutil.rmtree(ckpt_dir)
+        tmp.rename(ckpt_dir)
+
+    if async_write:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(base_dir: str | Path) -> int | None:
+    base = Path(base_dir)
+    if not base.exists():
+        return None
+    steps = []
+    for d in base.iterdir():
+        if d.is_dir() and d.name.startswith("step_") and (d / "manifest.json").exists():
+            steps.append(int(d.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, abstract_tree, shardings=None):
+    """Restore into the structure of ``abstract_tree``; if ``shardings``
+    (matching pytree of NamedSharding) is given, place shards directly on the
+    target mesh — the mesh may differ from the one that wrote the ckpt."""
+    ckpt_dir = Path(ckpt_dir)
+    manifest = json.loads((ckpt_dir / "manifest.json").read_text())
+    dtypes = manifest.get("dtypes", {})
+    with np.load(ckpt_dir / "arrays.npz") as z:
+        host = {}
+        for k in z.files:
+            a = z[k]
+            if dtypes.get(k) == "bfloat16":
+                import ml_dtypes
+                a = a.view(ml_dtypes.bfloat16)
+            host[k] = a
+    flat_abs, treedef = _flatten(abstract_tree)
+    missing = set(flat_abs) - set(host)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    if shardings is not None:
+        flat_sh, _ = _flatten(shardings)
+        vals = [jax.device_put(host[k], flat_sh[k]) for k in flat_abs]
+    else:
+        vals = [jax.numpy.asarray(host[k]) for k in flat_abs]
+    return jax.tree_util.tree_unflatten(treedef, vals), manifest

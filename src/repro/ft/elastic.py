@@ -1,0 +1,19 @@
+"""Elastic scaling: reshard live state onto a different mesh.
+
+Because checkpoints (and live arrays) carry global logical shapes, scaling in
+or out is a device_put with the new mesh's shardings.  The launcher uses this
+when the world size changes between restarts (node failures / preemption)."""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed import sharding as sh
+
+
+def reshard(tree, new_mesh, spec_fn=None):
+    """spec_fn(abstract_tree, mesh) -> specs; defaults to param rules."""
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    specs = (spec_fn or sh.param_specs)(abstract, new_mesh)
+    shardings = sh.named(specs, new_mesh)
+    host = jax.tree.map(lambda x: jax.device_get(x), tree)
+    return jax.tree.map(lambda h, s: jax.device_put(h, s), host, shardings)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for NasZip's compute hot-spots.
+
+fee_distance   — the VPE: feature-block-streamed distance with FEE-sPCA
+                 early exit (paper Fig. 10c/f adapted to VMEM streaming).
+dfloat_unpack  — the Dfloat process module: static-phase bitstream decode
+                 (paper Fig. 10d adapted from barrel shifter to VPU shifts).
+
+Each kernel ships with a pure-jnp/numpy oracle in ref.py and a jit'd wrapper
+in ops.py; tests sweep shapes/dtypes and assert allclose/bit-exactness.
+"""

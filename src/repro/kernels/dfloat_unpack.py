@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: Dfloat bitstream decode (the Dfloat process module,
+paper Fig. 10d) — packed uint32 words -> f32 features.
+
+Because the layout is burst-aligned (fields never straddle a 128-bit burst),
+every field position within a burst is static: for local field l of a width-w
+segment, (word index, bit offset) are compile-time constants.  The kernel
+therefore vectorizes over candidates x bursts and unrolls only over the
+<= floor(128/w) local phases per segment — all shifts are static scalars
+(the software analogue of the preset offset register driving the barrel
+shifter).
+
+Grid: (C // TILE_C,); the whole packed row (a few hundred bytes) sits in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import dfloat as dfl
+
+F32_MAN = 23
+F32_BIAS = 127
+
+
+def _decode_u32(fld, n_exp, n_man, bias):
+    """uint32 field -> f32 (valid encoded fields only; see dfloat.decode_fields)."""
+    w = 1 + n_exp + n_man
+    sign = (fld >> jnp.uint32(w - 1)) & jnp.uint32(1)
+    e = (fld >> jnp.uint32(n_man)) & jnp.uint32((1 << n_exp) - 1)
+    man = fld & jnp.uint32((1 << n_man) - 1)
+    # e - bias + 127 >= 1 for every valid encoded field, so two's-complement
+    # wraparound addition is exact even when bias > 127
+    ebias = jnp.uint32((F32_BIAS - bias) & 0xFFFFFFFF)
+    f32 = (sign << jnp.uint32(31)) \
+        | ((e + ebias) << jnp.uint32(F32_MAN)) \
+        | (man << jnp.uint32(F32_MAN - n_man))
+    f32 = jnp.where(fld == 0, jnp.uint32(0), f32)
+    return jax.lax.bitcast_convert_type(f32, jnp.float32)
+
+
+def _kernel(p_ref, out_ref, *, layout, wpb, dim):
+    packed = p_ref[:, :]                           # (TILE_C, W) uint32
+    tile_c = packed.shape[0]
+    for s, word0, nb, per in layout:
+        quad = packed[:, word0 : word0 + nb * wpb].reshape(tile_c, nb, wpb)
+        cols = []
+        for local in range(per):
+            bit = local * s.width
+            wi, ofs = bit >> 5, bit & 31
+            v = quad[:, :, wi] >> jnp.uint32(ofs)
+            if ofs + s.width > 32:
+                v = v | (quad[:, :, wi + 1] << jnp.uint32(32 - ofs))
+            fld = v & jnp.uint32((1 << s.width) - 1)
+            cols.append(_decode_u32(fld, s.n_exp, s.n_man, s.bias))
+        vals = jnp.stack(cols, axis=-1).reshape(tile_c, nb * per)
+        out_ref[:, s.start : s.start + s.n_dims] = vals[:, : s.n_dims]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "tile_c", "interpret"))
+def dfloat_unpack_pallas(packed, cfg: dfl.DfloatConfig, *, tile_c: int = 128,
+                         interpret: bool = True):
+    """packed (C, W) uint32 -> (C, D) f32, bit-exact vs dfloat.unpack_db."""
+    c, w = packed.shape
+    layout, w_words = dfl.burst_layout(cfg)
+    assert w == w_words, (w, w_words)
+    pad_c = (-c) % tile_c
+    if pad_c:
+        packed = jnp.pad(packed, ((0, pad_c), (0, 0)))
+    cp = c + pad_c
+    kern = functools.partial(_kernel, layout=layout, wpb=cfg.burst_bits // 32,
+                             dim=cfg.dim)
+    out = pl.pallas_call(
+        kern,
+        grid=(cp // tile_c,),
+        in_specs=[pl.BlockSpec((tile_c, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_c, cfg.dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cp, cfg.dim), jnp.float32),
+        interpret=interpret,
+    )(packed)
+    return out[:c]

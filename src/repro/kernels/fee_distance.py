@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: FEE-sPCA early-exit distance (the VPE datapath, Fig. 10c/f).
+
+TPU adaptation of the paper's per-burst early exit: candidates are tiled
+(TILE_C per grid row) and the feature axis is streamed through VMEM in
+``seg``-wide blocks (one block = the TPU analogue of one DRAM access group).
+After each block the estimated full distance
+
+    est = alpha_s * acc / beta_s - margin_s
+
+is compared against the beam threshold; lanes that exit stop accumulating,
+and once an entire candidate tile has exited the remaining feature blocks'
+*compute* is skipped (`pl.when`).  The DMA-skipping variant (manual async
+copies gated on the tile-exit flag — skipping the HBM traffic itself, which is
+the paper's actual win) lives in ``ops.fee_distance`` behind
+``skip_dma=True``; see EXPERIMENTS.md §Perf for the measured difference in
+bytes touched.
+
+Grid: (C // TILE_C, S) with the segment axis sequential ("arbitrary") so the
+accumulator scratch persists across feature blocks of one candidate tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 3.0e38
+
+
+def _kernel(q_ref, x_ref, thr_ref, alpha_ref, beta_ref, margin_ref,
+            dist_ref, rej_ref, segs_ref,
+            acc, alive, nseg, *, metric: str, n_segs: int, last_valid_seg: int):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        acc[:] = jnp.zeros_like(acc)
+        alive[:] = jnp.ones_like(alive)
+        nseg[:] = jnp.zeros_like(nseg)
+
+    tile_alive = alive[:].max() > 0
+
+    @pl.when(tile_alive)
+    def _compute():
+        x = x_ref[:, :]                       # (TILE_C, seg)
+        q = q_ref[:, :]                       # (1, seg)
+        if metric == "l2":
+            part = ((x - q) ** 2).sum(axis=1, keepdims=True)   # (TILE_C, 1)
+        else:
+            part = -(x * q).sum(axis=1, keepdims=True)
+        live = alive[:] > 0
+        acc[:] = acc[:] + jnp.where(live, part, 0.0)
+        nseg[:] = nseg[:] + jnp.where(live, 1, 0)
+        est = alpha_ref[s] * acc[:] / beta_ref[s] - margin_ref[s]
+        # exits only before the last segment (paper Fig. 6: at the last access
+        # the full distance is available anyway)
+        exit_now = live & (est >= thr_ref[0]) & (s < last_valid_seg)
+        alive[:] = jnp.where(exit_now, 0, alive[:])
+
+    @pl.when(s == n_segs - 1)
+    def _emit():
+        dist_ref[:, :] = acc[:]
+        rej_ref[:, :] = jnp.where(alive[:] > 0, 0, 1).astype(jnp.int32)
+        segs_ref[:, :] = nseg[:]
+
+
+@functools.partial(jax.jit, static_argnames=("seg", "metric", "tile_c", "interpret"))
+def fee_distance_pallas(q, x, threshold, alpha, beta, margin, *,
+                        seg: int, metric: str = "l2", tile_c: int = 128,
+                        interpret: bool = True):
+    """q (D,), x (C, D) -> (dist (C,), rejected (C,) bool, segs_used (C,)).
+
+    ``dist`` is the exact full score for survivors and the partial
+    accumulated score for rejected lanes (unused by the search, matching the
+    hardware which stops the burst stream on exit).
+    """
+    c, d = x.shape
+    n_segs = d // seg
+    assert n_segs * seg == d, (d, seg)
+    pad_c = (-c) % tile_c
+    if pad_c:
+        x = jnp.pad(x, ((0, pad_c), (0, 0)))
+    cp = c + pad_c
+    q2 = q.reshape(1, d)
+    thr = jnp.reshape(threshold, (1,)).astype(jnp.float32)
+
+    grid = (cp // tile_c, n_segs)
+    kern = functools.partial(_kernel, metric=metric, n_segs=n_segs,
+                             last_valid_seg=n_segs - 1)
+    dist, rej, segs = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, seg), lambda i, s: (0, s)),            # q
+            pl.BlockSpec((tile_c, seg), lambda i, s: (i, s)),       # x
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # threshold
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # alpha
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # beta
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # margin
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_c, 1), lambda i, s: (i, 0)),
+            pl.BlockSpec((tile_c, 1), lambda i, s: (i, 0)),
+            pl.BlockSpec((tile_c, 1), lambda i, s: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((cp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((cp, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_c, 1), jnp.float32),   # acc
+            pltpu.VMEM((tile_c, 1), jnp.int32),     # alive
+            pltpu.VMEM((tile_c, 1), jnp.int32),     # nseg
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q2, x, thr, alpha.astype(jnp.float32), beta.astype(jnp.float32),
+      margin.astype(jnp.float32))
+    return dist[:c, 0], rej[:c, 0].astype(bool), segs[:c, 0]

@@ -1,0 +1,42 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU these run compiled (interpret=False); on this CPU container they run
+in interpret mode (kernel body executed in Python), which is the validation
+target per the build spec.  ``backend="jnp"`` selects the pure-jnp oracle —
+used both as the reference in tests and as the fast path for CPU benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as ref_ops
+from repro.kernels.dfloat_unpack import dfloat_unpack_pallas
+from repro.kernels.fee_distance import fee_distance_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fee_distance(q, x, threshold, alpha, beta, margin, *, seg: int,
+                 metric: str = "l2", backend: str = "auto", tile_c: int = 128):
+    """VPE datapath: early-exit distance of candidates ``x`` vs query ``q``.
+
+    Returns (dist, rejected, segs_used); dist is partial for rejected lanes.
+    """
+    if backend == "jnp" or (backend == "auto" and not _on_tpu()):
+        return ref_ops.fee_distance_ref(q, x, threshold, alpha, beta, margin,
+                                        seg=seg, metric=metric)
+    return fee_distance_pallas(q, x, threshold, alpha, beta, margin, seg=seg,
+                               metric=metric, tile_c=tile_c,
+                               interpret=not _on_tpu())
+
+
+def dfloat_unpack(packed, cfg, *, backend: str = "auto", tile_c: int = 128):
+    """Dfloat process module: packed uint32 rows -> f32 features (bit-exact)."""
+    if backend == "jnp" or (backend == "auto" and not _on_tpu()):
+        import jax.numpy as jnp
+        import numpy as np
+        return jnp.asarray(ref_ops.dfloat_unpack_ref(np.asarray(packed), cfg))
+    return dfloat_unpack_pallas(packed, cfg, tile_c=tile_c,
+                                interpret=not _on_tpu())

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fee as fee_mod
+from repro.core import dfloat as dfl
+
+
+def fee_distance_ref(q, x, threshold, alpha, beta, margin, *, seg, metric="l2"):
+    """Oracle for kernels.fee_distance: same contract, pure jnp.
+
+    Note the kernel returns the *partial* accumulated distance for rejected
+    lanes (the hardware stops streaming); the oracle reproduces that too so
+    the comparison is exact on every output.
+    """
+    c, d = x.shape
+    s = d // seg
+    if metric == "l2":
+        per = ((x - q[None, :]) ** 2).reshape(c, s, seg).sum(-1)
+    else:
+        per = -(x * q[None, :]).reshape(c, s, seg).sum(-1)
+    cum = jnp.cumsum(per, axis=1)
+    est = alpha[None, :] * cum / beta[None, :] - margin[None, :]
+    exit_mask = est[:, : s - 1] >= threshold
+    any_exit = exit_mask.any(axis=1)
+    first_exit = jnp.argmax(exit_mask, axis=1)
+    segs_used = jnp.where(any_exit, first_exit + 1, s).astype(jnp.int32)
+    row = jnp.arange(c)
+    dist = jnp.where(any_exit, cum[row, segs_used - 1], cum[:, -1])
+    return dist, any_exit, segs_used
+
+
+def fee_search_semantics_ref(q, x, threshold, alpha, beta, margin, *, seg, metric="l2"):
+    """The (full-distance) variant used by core.search — sanity cross-check
+    that survivors' scores agree between the two contracts."""
+    return fee_mod.fee_distance(q, x, threshold, alpha, beta, margin,
+                                seg=seg, metric=metric)
+
+
+def dfloat_unpack_ref(packed: np.ndarray, cfg: dfl.DfloatConfig) -> np.ndarray:
+    """Oracle for kernels.dfloat_unpack (numpy bit-exact decoder)."""
+    return dfl.unpack_db(packed, cfg)

@@ -1,0 +1,113 @@
+"""Attention: chunked (FlashAttention-style) train/prefill path and the
+partial-softmax decode path used for sequence-sharded KV caches.
+
+The decode path is the transformer-side instance of the NasZip DaM pattern
+(DESIGN.md §4): the KV cache ("database") is sharded along the sequence axis
+across the ``model`` mesh axis; every shard computes a *partial* attention
+result over its local slice and only tiny (o, m, l) tuples are merged across
+shards — payloads never move.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1.0e30
+
+
+def _gqa_scores(q, k):
+    """q (B, T, K, G, dh), k (B, S, K, dh) -> scores (B, K, G, T, S) f32."""
+    return jnp.einsum("btkgh,bskh->bkgts", q, k, preferred_element_type=jnp.float32)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      q_chunk: int = 512, kv_chunk: int = 1024,
+                      kv_len=None):
+    """Memory-efficient attention with online softmax.
+
+    q (B, T, H, dh); k, v (B, S, K, dh); H = K * G (GQA).
+    q_offset: global position of q[0] (for causal masking in chunked prefill).
+    kv_len:   optional dynamic number of valid kv positions.
+    Returns (B, T, H, dh) in q.dtype.
+    """
+    b, t, h, dh = q.shape
+    s, kk = k.shape[1], k.shape[2]
+    g = h // kk
+    scale = dh ** -0.5
+    qc = min(q_chunk, t)
+    kc = min(kv_chunk, s)
+    nq, nk = t // qc, s // kc
+    assert nq * qc == t and nk * kc == s, (t, s, qc, kc)
+
+    qr = (q * scale).reshape(b, nq, qc, kk, g, dh).astype(q.dtype)
+    kr = k.reshape(b, nk, kc, kk, dh)
+    vr = v.reshape(b, nk, kc, kk, dh)
+    kv_pos = jnp.arange(s).reshape(nk, kc)
+    valid = jnp.ones((nk, kc), bool) if kv_len is None else (kv_pos < kv_len)
+
+    def q_block(qi, qb):
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            kb, vb, pos, val = inp
+            sc = _gqa_scores(qb, kb)                       # (B,K,G,qc,kc)
+            mask = val[None, :]
+            if causal:
+                mask = mask & (pos[None, :] <= q_pos[:, None])
+            sc = jnp.where(mask[None, None, None], sc, NEG)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            pv = jnp.einsum("bkgts,bskh->bkgth", p, vb,
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, kk, g, qc), NEG, jnp.float32)
+        l0 = jnp.zeros((b, kk, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kk, g, qc, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (kr.swapaxes(0, 1), vr.swapaxes(0, 1), kv_pos, valid))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,K,G,qc,dh)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, qc, h, dh)
+
+    outs = jax.lax.map(lambda i: q_block(i, qr[:, i]), jnp.arange(nq))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, t, h, dh).astype(q.dtype)
+
+
+def decode_attention_partial(q, k, v, kv_valid):
+    """One-token attention over a LOCAL KV slice -> partial (o, m, l).
+
+    q (B, H, dh); k, v (B, Sl, K, dh); kv_valid (B, Sl) bool.
+    Returns o (B, H, dh) f32 un-normalized, m (B, H) row max, l (B, H) sum.
+    Merge rule across shards (flash-decoding / the DaM tiny-merge):
+        m* = max(m_i); o* = sum_i o_i * exp(m_i - m*); l* = sum_i l_i * exp(m_i - m*)
+        out = o* / l*
+    """
+    b, h, dh = q.shape
+    kk = k.shape[2]
+    g = h // kk
+    scale = dh ** -0.5
+    qr = (q * scale).reshape(b, kk, g, dh)
+    sc = jnp.einsum("bkgh,bskh->bkgs", qr, k, preferred_element_type=jnp.float32)
+    sc = jnp.where(kv_valid[:, None, None, :], sc, NEG)
+    m = sc.max(-1)                                          # (B,K,G)
+    p = jnp.exp(sc - m[..., None])
+    p = jnp.where(kv_valid[:, None, None, :], p, 0.0)
+    l = p.sum(-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v, preferred_element_type=jnp.float32)
+    return (o.reshape(b, h, dh), m.reshape(b, h), l.reshape(b, h))
+
+
+def merge_partials(o, m, l, axis_name: str):
+    """Cross-shard LSE merge of decode partials (tiny payload collective)."""
+    m_g = jax.lax.pmax(m, axis_name)
+    alpha = jnp.exp(m - m_g)
+    o_g = jax.lax.psum(o * alpha[..., None], axis_name)
+    l_g = jax.lax.psum(l * alpha, axis_name)
+    return o_g / jnp.maximum(l_g, 1e-30)[..., None]

@@ -1,0 +1,167 @@
+"""Shared model primitives: config, norms, RoPE, losses, init helpers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One position in the repeating layer pattern."""
+    mixer: str   # "attn" | "mamba"
+    mlp: str     # "dense" | "moe" | "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                      # 0 -> d_model // n_heads
+    # layer pattern (cycled): e.g. dense = [A*], jamba = 7xM + 1xA
+    pattern: tuple[BlockSpec, ...] = (BlockSpec("attn", "dense"),)
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 2
+    moe_shared_experts: int = 0
+    moe_dense_residual: bool = False     # arctic: dense FFN parallel to MoE
+    capacity_factor: float = 1.25
+    # attention details
+    qkv_bias: bool = False               # qwen2
+    qk_norm: bool = False                # qwen3
+    rope_theta: float = 1e6
+    # mamba2 / SSD
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    decoder_len_train: int = 512
+    decoder_self_window: int = 448       # whisper max target positions
+    # modality frontend stub ("none" | "vision" | "audio"): input_specs()
+    # provides precomputed patch/frame embeddings per the assignment spec
+    frontend: str = "none"
+    frontend_tokens: int = 0             # tokens occupied by the stub frontend
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    # training memory policy
+    remat: bool = True
+    microbatch: int = 0                  # 0 -> no accumulation
+    optimizer: str = "adamw"             # "adamw" | "adafactor"
+    grad_acc_dtype: str = "f32"          # "bf16" for the 400B-class archs
+    scan_unroll: bool = False            # unroll layer scans (flops analysis)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.period == 0, (self.n_layers, self.period)
+        return self.n_layers // self.period
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return all(b.mixer == "mamba" for b in self.pattern)
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Analytical parameter count (for MODEL_FLOPS = 6*N*D)."""
+        d, dh = self.d_model, self.head_dim
+        n = 0
+        for b in self.pattern:
+            if b.mixer == "attn":
+                n += d * dh * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * dh * d
+            else:
+                di = self.d_inner
+                heads = self.ssm_heads
+                n += d * (2 * di + 2 * self.ssm_state + heads) + di * d \
+                    + self.ssm_conv * (di + 2 * self.ssm_state) + 2 * heads
+            if b.mlp == "dense":
+                n += 3 * d * self.d_ff
+            elif b.mlp == "moe":
+                e = self.moe_top_k if active_only else self.moe_experts
+                n += 3 * d * self.d_ff * e + d * self.moe_experts
+                if self.moe_shared_experts:
+                    n += 3 * d * self.d_ff * self.moe_shared_experts
+                if self.moe_dense_residual:
+                    n += 3 * d * self.d_ff
+            n += 2 * d
+        n *= self.n_groups
+        n += self.vocab * d * (1 if self.tie_embeddings else 2) + d
+        if self.is_encdec:
+            enc = d * dh * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * dh * d \
+                + 3 * d * self.d_ff + 2 * d
+            n += self.encoder_layers * enc
+            n += self.n_layers * (d * dh * (self.n_heads + 2 * self.n_kv_heads)
+                                  + self.n_heads * dh * d + d)  # cross-attn
+        return n
+
+
+def rms_norm(x, w, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., T, H, Dh); positions (..., T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., T, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean CE over valid positions.
+
+    GSPMD-friendly form: the label log-prob is a masked reduction (select +
+    sum) over the vocab axis instead of a gather, so a vocab-sharded logits
+    tensor reduces to per-token partials + a tiny all-reduce — no all-gather
+    of the (tokens, vocab) tensor."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.exp(shifted).sum(-1)) + m[..., 0]
+    vocab = logits.shape[-1]
+    onehot_mask = labels[..., None] == jnp.arange(vocab, dtype=labels.dtype)
+    ll = jnp.where(onehot_mask, logits, 0.0).sum(-1)
+    nll = lse - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def uinit(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

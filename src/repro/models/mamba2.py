@@ -1,0 +1,139 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Chunked SSD formulation: within a chunk the output is a masked, decay-weighted
+quadratic form (matmul-friendly — this is what makes SSD MXU-suitable on TPU);
+across chunks a small recurrent state (H heads x dh x d_state) is carried by a
+sequential scan.  Decode is the O(1) recurrence — which is why the SSM archs
+are the ones that run the ``long_500k`` shape.
+
+Layout follows mamba2: in_proj -> [z | x | B | C | dt], causal depthwise conv
+over (x|B|C), scalar A per head, head-wise D skip, gated RMSNorm out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, rms_norm, uinit
+
+
+def _segsum_decay(log_a):
+    """log_a (..., T) -> L (..., T, S) with L[t,s] = exp(sum_{s<u<=t} log_a_u),
+    masked to s <= t (the 1-semiseparable mask of SSD)."""
+    t = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]               # sum over (s, t]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """SSD scan.
+
+    x (B, T, H, dh); dt (B, T, H) >0; a_log (H,) <0 params as -exp(a_log);
+    b, c (B, T, S) shared across heads (mamba2 n_groups=1).
+    Returns y (B, T, H, dh).
+    """
+    bsz, t, h, dh = x.shape
+    s = b.shape[-1]
+    nc = t // chunk
+    assert nc * chunk == t, (t, chunk)
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (H,)
+    la = (dt.astype(jnp.float32) * a)                        # (B,T,H) log decay
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    lac = la.reshape(bsz, nc, chunk, h)
+    xc = xdt.reshape(bsz, nc, chunk, h, dh)
+    bc = b.reshape(bsz, nc, chunk, s).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, chunk, s).astype(jnp.float32)
+
+    # intra-chunk (quadratic, MXU-friendly)
+    ldec = _segsum_decay(lac.transpose(0, 1, 3, 2))          # (B,nc,H,T,T)
+    scores = jnp.einsum("bnts,bnus->bntu", cc, bc)           # (B,nc,T,T)
+    y_intra = jnp.einsum("bntu,bnhtu,bnuhd->bnthd", scores, ldec, xc)
+
+    # chunk-final states: S_n = sum_u decay(chunk_end - u) * B_u x_u^T
+    dec_end = jnp.exp(jnp.cumsum(lac, axis=2)[:, :, -1:, :] - jnp.cumsum(lac, axis=2))
+    states = jnp.einsum("bnus,bnuh,bnuhd->bnhsd", bc, dec_end, xc)
+    chunk_decay = jnp.exp(lac.sum(2))                        # (B,nc,H)
+
+    def scan_fn(h0, inp):
+        st, dec = inp
+        h1 = h0 * dec[..., None, None] + st
+        return h1, h0
+
+    h0 = jnp.zeros((bsz, h, s, dh), jnp.float32)
+    h_last, h_prev = jax.lax.scan(scan_fn, h0,
+                                  (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                           # (B,nc,H,S,dh) state entering chunk
+
+    # inter-chunk contribution: y_t += C_t . decay(start->t) . h_prev
+    dec_in = jnp.exp(jnp.cumsum(lac, axis=2))                # (B,nc,T,H)
+    y_inter = jnp.einsum("bnts,bnth,bnhsd->bnthd", cc, dec_in, h_prev)
+    y = (y_intra + y_inter).reshape(bsz, t, h, dh)
+    return y, h_last
+
+
+def mamba2_mixer(x, p, cfg: ModelConfig, conv_state=None, ssm_state=None,
+                 decode: bool = False):
+    """x (B, T, D) -> (B, T, D).  decode=True requires T == 1 and states."""
+    bsz, t, d = x.shape
+    di, s, heads, dh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.head_dim
+    k = cfg.ssm_conv
+
+    from repro.distributed.axes import weight_use
+    zxbcdt = jnp.einsum("btd,dp->btp", x, weight_use(p["in_proj"], x, None, "model"))
+    z, xin, b, c, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + s, 2 * di + 2 * s], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,T,H)
+
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)          # (B,T,di+2s)
+    if decode:
+        window = jnp.concatenate([conv_state, conv_in], axis=1)   # (B,k,di+2s)
+        new_conv_state = window[:, 1:]
+        conv = jnp.einsum("bkp,kp->bp", window, p["conv_w"])[:, None] + p["conv_b"]
+    else:
+        pad = jnp.pad(conv_in, ((0, 0), (k - 1, 0), (0, 0)))
+        windows = jnp.stack([pad[:, i : i + t] for i in range(k)], axis=2)  # (B,T,k,P)
+        conv = jnp.einsum("btkp,kp->btp", windows, p["conv_w"]) + p["conv_b"]
+        new_conv_state = pad[:, -(k - 1):] if k > 1 else None
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xc, bc, cc = jnp.split(conv, [di, di + s], axis=-1)
+    xh = xc.reshape(bsz, -1, heads, dh)
+
+    if decode:
+        a = -jnp.exp(p["a_log"].astype(jnp.float32))
+        dec = jnp.exp(dt[:, 0] * a)                          # (B,H)
+        dbx = jnp.einsum("bs,bh,bhd->bhsd", bc[:, 0].astype(jnp.float32),
+                         dt[:, 0], xh[:, 0].astype(jnp.float32))
+        new_ssm = ssm_state * dec[..., None, None] + dbx
+        y = jnp.einsum("bs,bhsd->bhd", cc[:, 0].astype(jnp.float32), new_ssm)
+        y = y[:, None]                                       # (B,1,H,dh)
+    else:
+        chunk = min(cfg.ssm_chunk, t)
+        while t % chunk:                          # largest divisor of t <= cfg chunk
+            chunk -= 1
+        y, new_ssm = ssd_chunked(xh, dt, p["a_log"], bc, cc, chunk)
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, -1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("btp,pd->btd", y, weight_use(p["out_proj"], x, "model", None))
+    return out, (new_conv_state, new_ssm)
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype):
+    d, di, s, heads = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k = cfg.ssm_conv
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * di + 2 * s + heads
+    return dict(
+        in_proj=uinit(ks[0], (d, proj_out), d**-0.5, dtype),
+        conv_w=uinit(ks[1], (k, di + 2 * s), 0.3, dtype),
+        conv_b=jnp.zeros((di + 2 * s,), dtype),
+        dt_bias=jnp.zeros((heads,), jnp.float32),
+        a_log=jnp.zeros((heads,), jnp.float32),
+        d_skip=jnp.ones((heads,), jnp.float32),
+        out_norm=jnp.ones((di,), dtype),
+        out_proj=uinit(ks[2], (di, d), di**-0.5, dtype),
+    )

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (GShard/Switch style).
+
+The dispatch follows the DaM principle (DESIGN.md §5): experts are sharded
+over the ``model`` axis (EP); tokens stay sharded over ``data``; only the
+dispatched activations move (an all-to-all the compiler derives from the
+einsum sharding), never the expert weights.
+
+Supports the assigned MoE variants:
+  * top-k routed experts (qwen2-moe top-4, arctic/jamba top-2)
+  * shared experts always on (qwen2-moe: 4 shared)
+  * a dense residual FFN in parallel with the routed experts (arctic)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+def swiglu(x, wi, wg, wo):
+    from repro.distributed.axes import weight_use
+    wi = weight_use(wi, x, None, "model")
+    wg = weight_use(wg, x, None, "model")
+    wo = weight_use(wo, x, "model", None)
+    h = jnp.einsum("...d,df->...f", x, wi)
+    g = jnp.einsum("...d,df->...f", x, wg)
+    h = jax.nn.silu(g) * h          # native dtype: keeps bwd collectives bf16
+    return jnp.einsum("...f,fd->...d", h, wo)
+
+
+def expert_swiglu(x, wi, wg, wo):
+    """x (..., E, C, D); w* (E, D, F)/(E, F, D) -> (..., E, C, D)."""
+    from repro.distributed.axes import weight_use
+    wi = weight_use(wi, x, "model", None, None)   # EP kept; dp gathered
+    wg = weight_use(wg, x, "model", None, None)
+    wo = weight_use(wo, x, "model", None, None)
+    h = jnp.einsum("...ecd,edf->...ecf", x, wi)
+    g = jnp.einsum("...ecd,edf->...ecf", x, wg)
+    h = jax.nn.silu(g) * h          # native dtype: keeps bwd collectives bf16
+    return jnp.einsum("...ecf,efd->...ecd", h, wo)
+
+
+def moe_ffn(x, p, cfg: ModelConfig):
+    """x (B, T, D) -> (B, T, D), plus aux load-balance loss.
+
+    GShard-style dispatch with PER-DP-SHARD capacity: tokens are grouped into
+    dp chunks and the position-in-expert prefix sum runs within a chunk only
+    — a global cumsum makes GSPMD all-gather the (N, k, E) one-hots across
+    the mesh (measured TB-scale collectives on arctic-480b, EXPERIMENTS.md
+    §Perf).  Expert weights stay put (EP over model); only activations move
+    (the DaM principle)."""
+    from repro.distributed.axes import constrain, dp_size
+
+    b, t, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    n = b * t
+    g = dp_size()
+    if n % g:
+        g = 1
+    nl = n // g                                              # tokens per chunk
+    xt = constrain(x.reshape(g, nl, d), "dp", None, None)
+
+    logits = jnp.einsum("gnd,de->gne", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                   # (g, nl, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(cfg.capacity_factor * k * nl / e))
+    # position of each (token, choice) within its expert's capacity buffer,
+    # local to the dp chunk
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32)       # (g, nl, k, E)
+    flat = onehot.reshape(g, nl * k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(g, nl, k, e)
+    pos = (pos * onehot).sum(-1)                             # (g, nl, k)
+    keep = pos < cap                                         # capacity drop
+    oh_e = jax.nn.one_hot(top_e, e, dtype=x.dtype)           # (g,nl,k,E)
+    oh_c = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=x.dtype)
+    dispatch = jnp.einsum("gnke,gnkc->gnec", oh_e, oh_c)
+    combine = jnp.einsum("gnke,gnkc,gnk->gnec", oh_e, oh_c, top_p.astype(x.dtype))
+
+    xe = jnp.einsum("gnec,gnd->gecd", dispatch, xt)          # (g, E, C, D)
+    ye = expert_swiglu(xe, p["wi"], p["wg"], p["wo"])
+    yt = jnp.einsum("gnec,gecd->gnd", combine, ye)
+
+    if cfg.moe_shared_experts:
+        yt = yt + swiglu(xt, p["shared_wi"], p["shared_wg"], p["shared_wo"])
+    if cfg.moe_dense_residual:
+        yt = yt + swiglu(xt, p["dense_wi"], p["dense_wg"], p["dense_wo"])
+
+    # GShard aux loss: mean(fraction routed * mean prob) * E
+    frac = oh_e.sum(2).mean((0, 1))                          # (E,)
+    aux = (frac * probs.mean((0, 1))).sum() * e
+    return yt.reshape(b, t, d), aux
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    from repro.models.common import uinit
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(key, 8)
+    p = dict(
+        router=uinit(ks[0], (d, e), d**-0.5, jnp.float32),
+        wi=uinit(ks[1], (e, d, f), d**-0.5, dtype),
+        wg=uinit(ks[2], (e, d, f), d**-0.5, dtype),
+        wo=uinit(ks[3], (e, f, d), f**-0.5, dtype),
+    )
+    if cfg.moe_shared_experts:
+        fs = f * cfg.moe_shared_experts
+        p.update(shared_wi=uinit(ks[4], (d, fs), d**-0.5, dtype),
+                 shared_wg=uinit(ks[5], (d, fs), d**-0.5, dtype),
+                 shared_wo=uinit(ks[6], (fs, d), fs**-0.5, dtype))
+    if cfg.moe_dense_residual:
+        p.update(dense_wi=uinit(ks[4], (d, f), d**-0.5, dtype),
+                 dense_wg=uinit(ks[5], (d, f), d**-0.5, dtype),
+                 dense_wo=uinit(ks[7], (f, d), f**-0.5, dtype))
+    return p

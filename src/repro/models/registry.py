@@ -1,0 +1,136 @@
+"""Uniform model API over the decoder-only and enc-dec families.
+
+ModelAPI bundles everything launch/train/serve/tests need:
+    init(rng) / abstract_params()
+    loss(params, batch)                      -> (scalar, metrics)
+    prefill(params, batch, kv_len)           -> (logits_last, cache)
+    decode(params, cache, tokens)            -> (logits, cache)
+    init_cache(batch, kv_len)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+from repro.models import whisper as wh
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    init_cache: Callable
+    decode: Callable
+    prefill: Callable
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def abstract_cache(self, batch: int, kv_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, kv_len))
+
+
+def _decoder_api(cfg: ModelConfig) -> ModelAPI:
+    def prefill(params, batch, kv_len):
+        """Prefill = full forward + cache build: returns last-position logits
+        and a cache covering the prompt (KV written seq-sharded)."""
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        logits, _ = tr.lm_forward(params, tokens, cfg,
+                                  prefix_embeds=batch.get("prefix_embeds"))
+        cache = tr.init_cache(cfg, b, kv_len)
+        # decode-consistent cache fill: replay K/V through the decode path is
+        # O(T); instead recompute K/V per layer in one pass
+        cache = tr_prefill_cache(params, batch, cache, cfg)
+        return logits[:, -1], cache
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: tr.init_params(key, cfg),
+        loss=lambda params, batch: tr.lm_loss(params, batch, cfg),
+        init_cache=lambda b, s: tr.init_cache(cfg, b, s),
+        decode=lambda params, cache, tokens: tr.decode_step(params, cache, tokens, cfg),
+        prefill=prefill,
+    )
+
+
+def tr_prefill_cache(params, batch, cache, cfg: ModelConfig):
+    """Populate a decode cache from a prompt in one forward pass."""
+    from repro.models.common import rms_norm, rope
+    from repro.models import mamba2 as m2, moe as moe_mod
+    from repro.models.transformer import attn_forward, block_forward
+
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    if batch.get("prefix_embeds") is not None:
+        x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], axis=1)
+    t = x.shape[1]
+    positions = jnp.arange(t)[None].astype(jnp.int32)
+
+    zero = jnp.zeros((), jnp.int32)
+
+    def group(carry, inp):
+        x, blocks = carry
+        gparams, g = inp
+        for i, spec in enumerate(cfg.pattern):
+            p, c = gparams[f"pos{i}"], blocks[f"pos{i}"]
+            h = rms_norm(x, p["norm1"], cfg.norm_eps)
+            if spec.mixer == "attn":
+                y, (kx, vx) = attn_forward(h, p["attn"], cfg, positions, return_kv=True)
+                kc = jax.lax.dynamic_update_slice(
+                    c["k"], kx[None].astype(c["k"].dtype), (g, zero, zero, zero, zero))
+                vc = jax.lax.dynamic_update_slice(
+                    c["v"], vx[None].astype(c["v"].dtype), (g, zero, zero, zero, zero))
+                blocks = dict(blocks, **{f"pos{i}": dict(k=kc, v=vc)})
+            else:
+                y, (conv_tail, ssm_final) = m2.mamba2_mixer(h, p["mamba"], cfg)
+                blocks = dict(blocks, **{f"pos{i}": dict(
+                    conv=jax.lax.dynamic_update_index_in_dim(
+                        c["conv"], conv_tail.astype(c["conv"].dtype), g, 0),
+                    ssm=jax.lax.dynamic_update_index_in_dim(c["ssm"], ssm_final, g, 0))})
+            x = x + y
+            if spec.mlp != "none":
+                h = rms_norm(x, p["norm2"], cfg.norm_eps)
+                if spec.mlp == "dense":
+                    x = x + moe_mod.swiglu(h, p["mlp"]["wi"], p["mlp"]["wg"], p["mlp"]["wo"])
+                else:
+                    y2, _ = moe_mod.moe_ffn(h, p["moe"], cfg)
+                    x = x + y2
+        return (x, blocks), None
+
+    (_, new_blocks), _ = jax.lax.scan(
+        group, (x, cache["blocks"]),
+        (params["blocks"], jnp.arange(cfg.n_groups)), unroll=cfg.scan_unroll)
+    return dict(pos=jnp.asarray(t, jnp.int32), blocks=new_blocks)
+
+
+def _encdec_api(cfg: ModelConfig) -> ModelAPI:
+    def prefill(params, batch, kv_len):
+        cache = wh.init_encdec_cache(params, cfg, batch["frames"].shape[0],
+                                     batch["frames"].shape[1])
+        cache = wh.prefill_cross(params, batch["frames"], cache, cfg)
+        b = batch["frames"].shape[0]
+        logits, cache = wh.encdec_decode_step(
+            params, cache, jnp.zeros((b,), jnp.int32), cfg)
+        return logits, cache
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: wh.init_whisper(key, cfg),
+        loss=lambda params, batch: wh.encdec_loss(params, batch, cfg),
+        init_cache=lambda b, s: wh.init_encdec_cache(
+            jax.eval_shape(lambda k: wh.init_whisper(k, cfg), jax.random.key(0)),
+            cfg, b, s),
+        decode=lambda params, cache, tokens: wh.encdec_decode_step(params, cache, tokens, cfg),
+        prefill=prefill,
+    )
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    return _encdec_api(cfg) if cfg.is_encdec else _decoder_api(cfg)

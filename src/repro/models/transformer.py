@@ -1,0 +1,347 @@
+"""Composable decoder LM covering all assigned architecture families.
+
+One parameterization drives dense GQA (llama/qwen/yi), MoE (arctic/qwen2-moe),
+SSM (mamba2), hybrid interleave (jamba) and — via models/whisper.py — enc-dec.
+Layers are stacked per pattern position and scanned over repeat groups so the
+HLO stays O(pattern period), not O(n_layers).
+
+Decode uses a sequence-sharded KV cache: the softmax/value reductions over the
+sharded sequence axis lower to tiny (B,H)-sized all-reduces — the GSPMD-derived
+form of the flash-decoding/LSE merge (and of NasZip's DaM tiny-merge pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models.attention import chunked_attention
+from repro.models.common import BlockSpec, ModelConfig, cross_entropy, rms_norm, rope, uinit
+
+
+# ---------------------------------------------------------------------------
+# per-block params
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg: ModelConfig, dtype):
+    d, dh = cfg.d_model, cfg.head_dim
+    h, k = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = dict(
+        wq=uinit(ks[0], (d, h * dh), d**-0.5, dtype),
+        wk=uinit(ks[1], (d, k * dh), d**-0.5, dtype),
+        wv=uinit(ks[2], (d, k * dh), d**-0.5, dtype),
+        wo=uinit(ks[3], (h * dh, d), (h * dh) ** -0.5, dtype),
+    )
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((h * dh,), dtype), bk=jnp.zeros((k * dh,), dtype),
+                 bv=jnp.zeros((k * dh,), dtype))
+    if cfg.qk_norm:
+        p.update(q_norm=jnp.ones((dh,), dtype), k_norm=jnp.ones((dh,), dtype))
+    return p
+
+
+def init_dense_mlp(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return dict(wi=uinit(ks[0], (d, f), d**-0.5, dtype),
+                wg=uinit(ks[1], (d, f), d**-0.5, dtype),
+                wo=uinit(ks[2], (f, d), f**-0.5, dtype))
+
+
+def init_block(key, spec: BlockSpec, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = dict(norm1=jnp.ones((cfg.d_model,), dtype))
+    if spec.mixer == "attn":
+        p["attn"] = init_attn(k1, cfg, dtype)
+    else:
+        p["mamba"] = m2.init_mamba2(k1, cfg, dtype)
+    if spec.mlp != "none":
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        if spec.mlp == "dense":
+            p["mlp"] = init_dense_mlp(k2, cfg, dtype)
+        else:
+            p["moe"] = moe_mod.init_moe(k2, cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = cfg.dtype
+    keys = jax.random.split(key, cfg.period + 2)
+    blocks = {}
+    for i, spec in enumerate(cfg.pattern):
+        # stack the group axis
+        per_group = [init_block(jax.random.fold_in(keys[i], g), spec, cfg, dtype)
+                     for g in range(cfg.n_groups)]
+        blocks[f"pos{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+    p = dict(
+        embed=uinit(keys[-2], (cfg.vocab, cfg.d_model), 0.02, dtype),
+        final_norm=jnp.ones((cfg.d_model,), dtype),
+        blocks=blocks,
+    )
+    if not cfg.tie_embeddings:
+        p["head"] = uinit(keys[-1], (cfg.d_model, cfg.vocab), cfg.d_model**-0.5, dtype)
+    return p
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# block forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _naive_attention(q, k, v, *, causal: bool):
+    b, t, h, dh = q.shape
+    s, kk = k.shape[1], k.shape[2]
+    g = h // kk
+    qq = q.reshape(b, t, kk, g, dh) * dh**-0.5
+    sc = jnp.einsum("btkgh,bskh->bkgts", qq, k, preferred_element_type=jnp.float32)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, s), bool))
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+    pw = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgts,bskh->btkgh", pw, v)
+    return o.reshape(b, t, h, dh)
+
+
+def attn_forward(x, p, cfg: ModelConfig, positions, causal=True, kv_len=None,
+                 return_kv=False):
+    from repro.distributed.axes import weight_use
+    b, t, d = x.shape
+    h, k, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    # FSDP: weights stored dp-sharded; gather to TP-only layout at use site
+    wq = weight_use(p["wq"], x, None, "model")
+    wk = weight_use(p["wk"], x, None, "model")
+    wv = weight_use(p["wv"], x, None, "model")
+    q = jnp.einsum("btd,dp->btp", x, wq)
+    kx = jnp.einsum("btd,dp->btp", x, wk)
+    vx = jnp.einsum("btd,dp->btp", x, wv)
+    if cfg.qkv_bias:
+        q, kx, vx = q + p["bq"], kx + p["bk"], vx + p["bv"]
+    q = q.reshape(b, t, h, dh)
+    kx = kx.reshape(b, t, k, dh)
+    vx = vx.reshape(b, t, k, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        kx = rms_norm(kx, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    kx = rope(kx, positions, cfg.rope_theta)
+    if cfg.scan_unroll:
+        # flops-analysis lowering: inner attention chunk loops are scans whose
+        # bodies XLA-CPU counts once — use the naive (fully counted) form
+        o = _naive_attention(q, kx, vx, causal=causal)
+    else:
+        o = chunked_attention(q, kx, vx, causal=causal, kv_len=kv_len)
+    out = jnp.einsum("btp,pd->btd", o.reshape(b, t, h * dh),
+                     weight_use(p["wo"], x, "model", None))
+    if return_kv:
+        return out, (kx, vx)
+    return out
+
+
+def block_forward(x, p, spec: BlockSpec, cfg: ModelConfig, positions):
+    aux = jnp.float32(0.0)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        x = x + attn_forward(h, p["attn"], cfg, positions)
+    else:
+        y, _ = m2.mamba2_mixer(h, p["mamba"], cfg)
+        x = x + y
+    if spec.mlp != "none":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if spec.mlp == "dense":
+            x = x + moe_mod.swiglu(h, p["mlp"]["wi"], p["mlp"]["wg"], p["mlp"]["wo"])
+        else:
+            y, a = moe_mod.moe_ffn(h, p["moe"], cfg)
+            x, aux = x + y, aux + a
+    return x, aux
+
+
+def backbone(params, x, cfg: ModelConfig, positions):
+    """Scan over repeat groups; python-unrolled pattern inside each group."""
+
+    def group(x, gparams):
+        aux = jnp.float32(0.0)
+        for i, spec in enumerate(cfg.pattern):
+            x, a = block_forward(x, gparams[f"pos{i}"], spec, cfg, positions)
+            aux += a
+        return x, aux
+
+    body = group
+    if cfg.remat:
+        body = jax.checkpoint(group, policy=jax.checkpoint_policies.nothing_saveable)
+    x, auxs = jax.lax.scan(lambda c, p_: body(c, p_), x, params["blocks"],
+                           unroll=cfg.scan_unroll)
+    return x, auxs.sum()
+
+
+def lm_forward(params, tokens, cfg: ModelConfig, prefix_embeds=None):
+    """tokens (B, T) -> logits (B, T', V).
+
+    prefix_embeds (B, P, D): stub modality frontend output (VLM patches /
+    audio frames) prepended to the token embeddings; logits cover only the
+    token positions.
+    """
+    from repro.distributed.axes import constrain
+
+    x = params["embed"][tokens]                              # (B,T,D)
+    n_prefix = 0
+    if prefix_embeds is not None:
+        n_prefix = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, "dp", None, None)
+    positions = jnp.arange(x.shape[1])[None, :].astype(jnp.int32)
+    x, aux = backbone(params, x, cfg, positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("btd,dv->btv", x, head)
+    logits = constrain(logits, "dp", None, "model")          # keep vocab sharded
+    return logits, aux
+
+
+def lm_loss(params, batch, cfg: ModelConfig):
+    logits, aux = lm_forward(params, batch["tokens"], cfg,
+                             prefix_embeds=batch.get("prefix_embeds"))
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss + 0.01 * aux, dict(loss=loss, aux=aux)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step): one token, KV cache of kv_len
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, kv_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    g, dh, k = cfg.n_groups, cfg.head_dim, cfg.n_kv_heads
+    blocks = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.mixer == "attn":
+            blocks[f"pos{i}"] = dict(
+                k=jnp.zeros((g, batch, kv_len, k, dh), dtype),
+                v=jnp.zeros((g, batch, kv_len, k, dh), dtype),
+            )
+        else:
+            blocks[f"pos{i}"] = dict(
+                conv=jnp.zeros((g, batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype),
+                ssm=jnp.zeros((g, batch, cfg.ssm_heads, cfg.ssm_state, dh), jnp.float32),
+            )
+    return dict(pos=jnp.zeros((), jnp.int32), blocks=blocks)
+
+
+def attn_decode(x, p, kcache, vcache, g, pos, cfg: ModelConfig):
+    """x (B, 1, D); kcache/vcache (G, B, S, K, dh) seq-(model-)sharded.
+
+    READ-ONLY on the cache: attention runs over the cached prefix [0, pos)
+    plus the current token's (kx, vx) merged explicitly (flash-decoding
+    style).  The new-token k/v are returned to the caller, which writes all
+    groups with ONE out-of-loop dynamic_update_slice — that keeps the donated
+    cache buffer aliased (no scan-carry double buffering) and the max/sum
+    reductions over the sharded S axis lower to tiny LSE-merge collectives."""
+    b, _, d = x.shape
+    h, k, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    from repro.distributed.axes import weight_use
+    q = jnp.einsum("btd,dp->btp", x, weight_use(p["wq"], x, None, "model"))
+    kx = jnp.einsum("btd,dp->btp", x, weight_use(p["wk"], x, None, "model"))
+    vx = jnp.einsum("btd,dp->btp", x, weight_use(p["wv"], x, None, "model"))
+    if cfg.qkv_bias:
+        q, kx, vx = q + p["bq"], kx + p["bk"], vx + p["bv"]
+    q = q.reshape(b, 1, h, dh)
+    kx = kx.reshape(b, 1, k, dh)
+    vx = vx.reshape(b, 1, k, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        kx = rms_norm(kx, p["k_norm"], cfg.norm_eps)
+    pp = jnp.full((1, 1), pos, jnp.int32)
+    q = rope(q, pp, cfg.rope_theta)
+    kx = rope(kx, pp, cfg.rope_theta)
+    kc = jax.lax.dynamic_index_in_dim(kcache, g, 0, keepdims=False)
+    vc = jax.lax.dynamic_index_in_dim(vcache, g, 0, keepdims=False)
+    gq = h // k
+    qr = (q[:, 0].reshape(b, k, gq, dh) * dh**-0.5)
+    sc = jnp.einsum("bkgh,bskh->bkgs", qr, kc, preferred_element_type=jnp.float32)
+    valid = jnp.arange(kc.shape[1]) < pos                     # cached prefix only
+    sc = jnp.where(valid[None, None, None, :], sc, -1e30)
+    sc_cur = jnp.einsum("bkgh,bkh->bkg", qr, kx[:, 0].astype(qr.dtype))[..., None]
+    m = jnp.maximum(sc.max(-1, keepdims=True), sc_cur)
+    pw = jnp.exp(sc - m)
+    p_cur = jnp.exp(sc_cur - m)                               # current token
+    o = jnp.einsum("bkgs,bskh->bkgh", pw.astype(kc.dtype), vc,
+                   preferred_element_type=jnp.float32)
+    o = o + p_cur * vx[:, 0, :, None, :].astype(jnp.float32)
+    o = o / (pw.sum(-1)[..., None] + p_cur)
+    out = jnp.einsum("bp,pd->bd", o.reshape(b, h * dh).astype(x.dtype),
+                     weight_use(p["wo"], x, "model", None))
+    return out[:, None], kx, vx
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """tokens (B,) -> logits (B, V), updated cache.  One serve_step.
+
+    Cache updates are collected as tiny per-group ys during the scan and
+    applied afterwards with one dynamic_update_slice per cache array on the
+    donated buffers — peak memory ~1x cache."""
+    x = params["embed"][tokens][:, None]                     # (B,1,D)
+    pos = cache["pos"]
+    blocks = cache["blocks"]
+
+    def group(x, inp):
+        gparams, g = inp
+        updates = {}
+        for i, spec in enumerate(cfg.pattern):
+            p, cb = gparams[f"pos{i}"], blocks[f"pos{i}"]
+            h = rms_norm(x, p["norm1"], cfg.norm_eps)
+            if spec.mixer == "attn":
+                y, kx, vx = attn_decode(h, p["attn"], cb["k"], cb["v"], g, pos, cfg)
+                updates[f"pos{i}"] = dict(k=kx.astype(cb["k"].dtype),
+                                          v=vx.astype(cb["v"].dtype))
+            else:
+                conv = jax.lax.dynamic_index_in_dim(cb["conv"], g, 0, keepdims=False)
+                ssm = jax.lax.dynamic_index_in_dim(cb["ssm"], g, 0, keepdims=False)
+                y, (conv, ssm) = m2.mamba2_mixer(h, p["mamba"], cfg,
+                                                 conv_state=conv, ssm_state=ssm,
+                                                 decode=True)
+                updates[f"pos{i}"] = dict(conv=conv.astype(cb["conv"].dtype), ssm=ssm)
+            x = x + y
+            if spec.mlp != "none":
+                h = rms_norm(x, p["norm2"], cfg.norm_eps)
+                if spec.mlp == "dense":
+                    x = x + moe_mod.swiglu(h, p["mlp"]["wi"], p["mlp"]["wg"], p["mlp"]["wo"])
+                else:
+                    y, _ = moe_mod.moe_ffn(h, p["moe"], cfg)
+                    x = x + y
+        return x, updates
+
+    x, upds = jax.lax.scan(group, x, (params["blocks"], jnp.arange(cfg.n_groups)),
+                           unroll=cfg.scan_unroll)
+
+    zero = jnp.zeros((), jnp.int32)
+    new_blocks = {}
+    for i, spec in enumerate(cfg.pattern):
+        cb, u = blocks[f"pos{i}"], upds[f"pos{i}"]
+        if spec.mixer == "attn":
+            # u["k"]: (G, B, 1, K, dh) -> one in-place token-column write
+            new_blocks[f"pos{i}"] = dict(
+                k=jax.lax.dynamic_update_slice(cb["k"], u["k"],
+                                               (zero, zero, pos, zero, zero)),
+                v=jax.lax.dynamic_update_slice(cb["v"], u["v"],
+                                               (zero, zero, pos, zero, zero)),
+            )
+        else:
+            new_blocks[f"pos{i}"] = dict(conv=u["conv"], ssm=u["ssm"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], head)
+    from repro.distributed.axes import constrain
+    logits = constrain(logits, "dp", "model")
+    return logits, dict(pos=pos + 1, blocks=new_blocks)

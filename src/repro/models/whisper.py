@@ -1,0 +1,183 @@
+"""Encoder-decoder transformer (whisper-base backbone).
+
+Per the assignment spec the conv/mel frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, D).  The decoder is causal
+with cross-attention to the encoder memory.
+
+Shape interpretation (DESIGN.md §5): ``decode_*`` shapes put seq_len on the
+*cross-attention* KV (the encoder memory — whisper's long axis), with the
+self-attention cache capped at ``decoder_self_window`` (=448, whisper's max
+target positions).  The cross-KV is sequence-sharded over the ``model`` axis
+exactly like the decoder-only KV caches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, cross_entropy, rms_norm, rope, uinit
+from repro.models.attention import chunked_attention
+from repro.models.transformer import init_attn, init_dense_mlp
+from repro.models import moe as moe_mod
+
+
+def init_whisper(key, cfg: ModelConfig):
+    dtype = cfg.dtype
+    ks = jax.random.split(key, 6)
+
+    def stack(fn, key, n):
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[fn(jax.random.fold_in(key, i)) for i in range(n)])
+
+    enc_block = lambda k: dict(
+        norm1=jnp.ones((cfg.d_model,), dtype), attn=init_attn(k, cfg, dtype),
+        norm2=jnp.ones((cfg.d_model,), dtype),
+        mlp=init_dense_mlp(jax.random.fold_in(k, 7), cfg, dtype))
+    dec_block = lambda k: dict(
+        norm1=jnp.ones((cfg.d_model,), dtype), attn=init_attn(k, cfg, dtype),
+        norm_x=jnp.ones((cfg.d_model,), dtype),
+        xattn=init_attn(jax.random.fold_in(k, 5), cfg, dtype),
+        norm2=jnp.ones((cfg.d_model,), dtype),
+        mlp=init_dense_mlp(jax.random.fold_in(k, 7), cfg, dtype))
+
+    return dict(
+        enc_blocks=stack(enc_block, ks[0], cfg.encoder_layers),
+        dec_blocks=stack(dec_block, ks[1], cfg.n_layers),
+        enc_norm=jnp.ones((cfg.d_model,), dtype),
+        final_norm=jnp.ones((cfg.d_model,), dtype),
+        embed=uinit(ks[2], (cfg.vocab, cfg.d_model), 0.02, dtype),
+        head=uinit(ks[3], (cfg.d_model, cfg.vocab), cfg.d_model**-0.5, dtype),
+    )
+
+
+def _xattn(x, p, memory, cfg: ModelConfig):
+    b, t, d = x.shape
+    h, k, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dp->btp", x, p["wq"]).reshape(b, t, h, dh)
+    kx = jnp.einsum("bsd,dp->bsp", memory, p["wk"]).reshape(b, -1, k, dh)
+    vx = jnp.einsum("bsd,dp->bsp", memory, p["wv"]).reshape(b, -1, k, dh)
+    o = chunked_attention(q, kx, vx, causal=False)
+    return jnp.einsum("btp,pd->btd", o.reshape(b, t, h * dh), p["wo"])
+
+
+def encode(params, frames, cfg: ModelConfig):
+    positions = jnp.arange(frames.shape[1])[None].astype(jnp.int32)
+
+    def block(x, p):
+        from repro.models.transformer import attn_forward
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        x = x + attn_forward(h, p["attn"], cfg, positions, causal=False)
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + moe_mod.swiglu(h, p["mlp"]["wi"], p["mlp"]["wg"], p["mlp"]["wo"])
+        return x, None
+
+    body = jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else block
+    x, _ = jax.lax.scan(lambda c, p: body(c, p), frames.astype(cfg.dtype),
+                        params["enc_blocks"], unroll=cfg.scan_unroll)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def encdec_forward(params, frames, tokens, cfg: ModelConfig):
+    memory = encode(params, frames, cfg)
+    x = params["embed"][tokens]
+    positions = jnp.arange(x.shape[1])[None].astype(jnp.int32)
+
+    def block(x, p):
+        from repro.models.transformer import attn_forward
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        x = x + attn_forward(h, p["attn"], cfg, positions, causal=True)
+        h = rms_norm(x, p["norm_x"], cfg.norm_eps)
+        x = x + _xattn(h, p["xattn"], memory, cfg)
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + moe_mod.swiglu(h, p["mlp"]["wi"], p["mlp"]["wg"], p["mlp"]["wo"])
+        return x, None
+
+    body = jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else block
+    x, _ = jax.lax.scan(lambda c, p: body(c, p), x, params["dec_blocks"], unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return jnp.einsum("btd,dv->btv", x, params["head"])
+
+
+def encdec_loss(params, batch, cfg: ModelConfig):
+    logits = encdec_forward(params, batch["frames"], batch["tokens"], cfg)
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, dict(loss=loss, aux=jnp.float32(0.0))
+
+
+# --------------------------- decode path ------------------------------------
+
+
+def init_encdec_cache(params, cfg: ModelConfig, batch: int, enc_len: int):
+    """Cross-KV computed once from the encoder memory + small self-KV ring."""
+    k, dh = cfg.n_kv_heads, cfg.head_dim
+    n = cfg.n_layers
+    w = cfg.decoder_self_window
+    return dict(
+        pos=jnp.zeros((), jnp.int32),
+        self_k=jnp.zeros((n, batch, w, k, dh), cfg.dtype),
+        self_v=jnp.zeros((n, batch, w, k, dh), cfg.dtype),
+        cross_k=jnp.zeros((n, batch, enc_len, k, dh), cfg.dtype),
+        cross_v=jnp.zeros((n, batch, enc_len, k, dh), cfg.dtype),
+    )
+
+
+def prefill_cross(params, frames, cache, cfg: ModelConfig):
+    memory = encode(params, frames, cfg)
+
+    def per_layer(p):
+        k = jnp.einsum("bsd,dp->bsp", memory, p["xattn"]["wk"])
+        v = jnp.einsum("bsd,dp->bsp", memory, p["xattn"]["wv"])
+        b, s = memory.shape[:2]
+        return (k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim),
+                v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim))
+
+    ks, vs = jax.lax.map(lambda p: per_layer(p), params["dec_blocks"])
+    return dict(cache, cross_k=ks.astype(cfg.dtype), cross_v=vs.astype(cfg.dtype))
+
+
+def encdec_decode_step(params, cache, tokens, cfg: ModelConfig):
+    from repro.models.transformer import attn_decode
+    x = params["embed"][tokens][:, None]
+    pos = cache["pos"]
+
+    zero = jnp.zeros((), jnp.int32)
+
+    def layer(carry, inp):
+        x, sks, svs = carry
+        p, ck, cv, li = inp
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        y, kx, vx = attn_decode(h, p["attn"], sks, svs, li, pos, cfg)
+        # self-KV is small (448 window): in-carry write is fine
+        sks = jax.lax.dynamic_update_slice(sks, kx[None].astype(sks.dtype),
+                                           (li, zero, pos, zero, zero))
+        svs = jax.lax.dynamic_update_slice(svs, vx[None].astype(svs.dtype),
+                                           (li, zero, pos, zero, zero))
+        x = x + y
+        h = rms_norm(x, p["norm_x"], cfg.norm_eps)
+        b = x.shape[0]
+        hh, kk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = jnp.einsum("btd,dp->btp", h, p["xattn"]["wq"]).reshape(b, hh, dh)
+        g = hh // kk
+        qr = q.reshape(b, kk, g, dh) * dh**-0.5
+        sc = jnp.einsum("bkgh,bskh->bkgs", qr, ck, preferred_element_type=jnp.float32)
+        m = sc.max(-1, keepdims=True)
+        pw = jnp.exp(sc - m)
+        o = jnp.einsum("bkgs,bskh->bkgh", pw.astype(ck.dtype), cv,
+                       preferred_element_type=jnp.float32)
+        o = (o / pw.sum(-1)[..., None]).reshape(b, hh * dh).astype(x.dtype)
+        x = x + jnp.einsum("bp,pd->bd", o, p["xattn"]["wo"])[:, None]
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + moe_mod.swiglu(h, p["mlp"]["wi"], p["mlp"]["wg"], p["mlp"]["wo"])
+        return (x, sks, svs), None
+
+    (x, sks, svs), _ = jax.lax.scan(
+        layer, (x, cache["self_k"], cache["self_v"]),
+        (params["dec_blocks"], cache["cross_k"], cache["cross_v"],
+         jnp.arange(cfg.n_layers)), unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], params["head"])
+    from repro.distributed.axes import constrain
+    logits = constrain(logits, "dp", "model")
+    return logits, dict(cache, pos=pos + 1, self_k=sks, self_v=svs)

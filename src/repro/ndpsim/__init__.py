@@ -1,0 +1,4 @@
+"""Trace-driven DIMM-NDP performance model (UniNDP stand-in, §VI-A)."""
+from repro.ndpsim.cache import SetAssocCache  # noqa: F401
+from repro.ndpsim.engine import SimFlags, SimResult, simulate_ndp, simulate_platform  # noqa: F401
+from repro.ndpsim import timing  # noqa: F401

@@ -1,0 +1,294 @@
+"""Trace-driven DIMM-NDP performance model (the role UniNDP plays in §VI-A).
+
+Input: per-hop traces from the JAX beam searcher (expanded node, fresh
+candidates, FEE segments touched, accepted distances), a vector->sub-channel
+ownership map, and a Dfloat config.  The engine replays the search
+hop-synchronized per query batch (paper §V-E) against a model of:
+
+  * per-sub-channel DRAM streaming (burst-granular, FEE/Dfloat-aware),
+  * the VPE consume rate,
+  * DaM vs naive neighbor-list placement (cross-channel traffic, CPU lookup),
+  * LNC-T / LNC-D caches (LRU, line-granular),
+  * next-hop neighbor-list prefetch from the per-sub-channel local queues
+    overlapped with the host merge,
+  * host control/merge costs.
+
+Outputs: QPS, per-query latency, the three-way latency breakdown of Fig. 18,
+cache/prefetch hit rates (Fig. 21), balance (Fig. 23), DRAM traffic (Fig. 20)
+and energy (Fig. 17).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.dfloat import DfloatConfig
+from repro.ndpsim.cache import SetAssocCache
+from repro.ndpsim.timing import NDPConfig, PlatformConfig
+
+BIG = 1.0e38
+
+
+@dataclasses.dataclass
+class SimFlags:
+    dam: bool = True          # data-aware neighbor-list mapping (§V-C2)
+    lnc: bool = True          # local neighbor cache (§V-D)
+    prefetch: bool = True     # next-hop list prefetch (§V-E)
+    batch: int = 16
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    qps: float
+    avg_latency_us: float
+    t_neighbor_us: float      # neighbor-list retrieval
+    t_distance_us: float      # distance computation (incl. vector streaming)
+    t_partial_us: float       # partial-result processing / host comm
+    lnc_t_hit: float
+    lnc_d_hit: float
+    prefetch_hit: float
+    prefetch_hit_by_hop: np.ndarray
+    idle_frac: float          # earliest-finishing sub-channel idle share
+    dram_bytes_per_query: float
+    energy_uj_per_query: float
+
+    def breakdown(self):
+        tot = self.t_neighbor_us + self.t_distance_us + self.t_partial_us
+        return dict(neighbor=self.t_neighbor_us / tot, distance=self.t_distance_us / tot,
+                    partial=self.t_partial_us / tot)
+
+
+def _list_bytes(n_entries: int) -> int:
+    return 4 * max(n_entries, 1)  # 4B per neighbor id (Fig. 12b)
+
+
+def simulate_ndp(traces: dict, owner: np.ndarray, adj: np.ndarray,
+                 hw: NDPConfig, flags: SimFlags, dfloat_cfg: DfloatConfig,
+                 seg: int, name: str = "naszip") -> SimResult:
+    node = np.asarray(traces["node"])          # (Q, H)
+    nbrs = np.asarray(traces["nbrs"])          # (Q, H, M)
+    segs = np.asarray(traces["segs"])          # (Q, H, M)
+    cand_d = np.asarray(traces["cand_d"])      # (Q, H, M)
+    q_total, hmax = node.shape
+    n_sub = hw.n_subchannels
+    n_nodes = adj.shape[0]
+
+    # per-channel partition sizes of every node's list (DaM, Fig. 12)
+    nb_owner = owner[np.where(adj < 0, 0, adj)]
+    part_size = np.zeros((n_sub, n_nodes), np.int32)
+    for c in range(n_sub):
+        part_size[c] = ((nb_owner == c) & (adj >= 0)).sum(1)
+    full_size = (adj >= 0).sum(1)
+
+    # address maps: per-channel NLT (4B/node) + list heap; vectors separate
+    list_base = 16 * n_nodes  # leave NLT region [0, 4*N) distinct per channel
+    part_addr = np.zeros((n_sub, n_nodes), np.int64)
+    for c in range(n_sub):
+        part_addr[c] = list_base + np.concatenate([[0], np.cumsum(_list_bytes(0) + 4 * part_size[c][:-1])])
+    full_addr = list_base + np.arange(n_nodes, dtype=np.int64) * (4 * adj.shape[1])
+
+    lnc_t = [SetAssocCache(hw.lnc_t_bytes, hw.line_bytes) for _ in range(n_sub)]
+    lnc_d = [SetAssocCache(hw.lnc_d_bytes, hw.line_bytes, hw.lnc_ways_d) for _ in range(n_sub)]
+
+    t_burst, t_feat = hw.t_burst_ns, hw.t_feature_ns
+    feats_per_seg = seg
+
+    tot_time_ns = 0.0
+    t_nb = t_dist = t_part = 0.0
+    dram_bytes = 0.0
+    energy_pj = 0.0
+    pf_attempts = np.zeros(hmax)
+    pf_hits = np.zeros(hmax)
+    idle_num = idle_den = 0.0
+    lat_sum_ns = 0.0
+
+    order = np.arange(q_total)
+    for b0 in range(0, q_total, flags.batch):
+        batch = order[b0 : b0 + flags.batch]
+        batch_time = 0.0
+        # per-(query,channel) local candidate pools: {cand: dist}
+        pools = [[dict() for _ in range(n_sub)] for _ in batch]
+        predictions = np.full((len(batch), n_sub), -1, np.int64)
+
+        for h in range(hmax):
+            act = [i for i, q in enumerate(batch) if node[q, h] >= 0]
+            if not act:
+                break
+            ch_busy = np.zeros(n_sub)
+            # one broadcast command packet per hop + small per-query payload
+            host_ns = hw.host_cmd_ns + 20.0 * len(act)
+            n_accept_total = 0
+
+            for i in act:
+                q = batch[i]
+                v = int(node[q, h])
+                # ---- phase 1: neighbor-list retrieval --------------------
+                if flags.dam:
+                    for c in range(n_sub):
+                        psz = int(part_size[c, v])
+                        if psz == 0:
+                            continue
+                        lbytes = _list_bytes(psz)
+                        if flags.prefetch:
+                            # a "hit" = the next-hop list is on-chip when the
+                            # hop starts: either predicted exactly, or still
+                            # resident from an earlier (pre)fetch (§V-E: failed
+                            # prefetches are retained in the LNC and reused)
+                            pf_attempts[h] += 1
+                            if predictions[i, c] == v or (
+                                flags.lnc and lnc_d[c].contains(int(part_addr[c, v]), lbytes)
+                            ):
+                                pf_hits[h] += 1
+                        nlt_miss = lnc_t[c].access(4 * v, 4) if flags.lnc else 1
+                        d_miss = (lnc_d[c].access(int(part_addr[c, v]), lbytes)
+                                  if flags.lnc else -(-lbytes // hw.line_bytes))
+                        t = hw.cache_hit_ns * 2
+                        if nlt_miss:
+                            t += hw.t_row_open_ns + t_burst
+                            dram_bytes += hw.line_bytes
+                        if d_miss:
+                            t += hw.t_row_open_ns + d_miss * t_burst
+                            dram_bytes += d_miss * hw.line_bytes
+                        ch_busy[c] += t
+                        t_nb += t
+                        energy_pj += (nlt_miss + d_miss) * hw.line_bytes * 8 * hw.e_dram_pj_per_bit
+                        energy_pj += lbytes * 8 * hw.e_cache_pj_per_bit
+                else:
+                    # host walks the NLT + list at the owner channel (Fig. 4a
+                    # "index lookup" — on the critical path, not parallel)
+                    c = int(owner[v])
+                    lbytes = _list_bytes(int(full_size[v]))
+                    lines = -(-lbytes // hw.line_bytes)
+                    t = hw.host_nlt_lookup_ns + hw.t_row_open_ns + lines * t_burst
+                    host_ns += t
+                    t_nb += t
+                    dram_bytes += lines * hw.line_bytes
+                    energy_pj += lines * hw.line_bytes * 8 * hw.e_dram_pj_per_bit
+
+                # ---- phase 2: distance computation -----------------------
+                cand = nbrs[q, h]
+                mask = cand >= 0
+                for j in np.nonzero(mask)[0]:
+                    cid = int(cand[j])
+                    s_used = int(segs[q, h, j])
+                    n_b = dfloat_cfg.bursts_for_prefix(s_used * feats_per_seg)
+                    stream = hw.t_row_open_ns + n_b * t_burst
+                    compute = s_used * feats_per_seg * t_feat
+                    tc = max(stream, compute)
+                    cc = int(owner[cid])
+                    if flags.dam:
+                        ch_busy[cc] += tc
+                    else:
+                        # whole list processed at owner(v); remote vectors
+                        # cross sub-channels through the host (Fig. 4b)
+                        cv = int(owner[v])
+                        ch_busy[cv] += tc
+                        if cc != cv:
+                            vec_bytes = n_b * hw.burst_bytes
+                            xl = -(-vec_bytes // hw.line_bytes)
+                            pen = xl * hw.cross_channel_ns_per_line
+                            ch_busy[cv] += pen
+                            t_part += pen
+                    t_dist += tc
+                    dram_bytes += n_b * hw.burst_bytes
+                    energy_pj += n_b * hw.burst_bytes * 8 * hw.e_dram_pj_per_bit
+                    energy_pj += s_used * feats_per_seg * hw.e_fpu_pj_per_feature
+                    d = float(cand_d[q, h, j])
+                    if d < BIG / 2:
+                        n_accept_total += 1
+                        pools[i][int(owner[cid])][cid] = d
+
+                # expanded node leaves every local pool
+                for c in range(n_sub):
+                    pools[i][c].pop(v, None)
+
+            # ---- phase 3: host merge + prefetch overlap ------------------
+            merge_ns = hw.host_merge_base_ns + hw.host_merge_per_cand_ns * n_accept_total
+            energy_pj += hw.e_host_nj_per_hop * 1e3 * len(act)
+            pf_ns = 0.0
+            if flags.prefetch and flags.dam:
+                for i in act:
+                    for c in range(n_sub):
+                        if pools[i][c]:
+                            p = min(pools[i][c], key=pools[i][c].get)
+                            predictions[i, c] = p
+                            if flags.lnc:
+                                lnc_t[c].fill(4 * p, 4)
+                                lnc_d[c].fill(int(part_addr[c, p]),
+                                              _list_bytes(int(part_size[c, p])))
+                        else:
+                            predictions[i, c] = -1
+                # prefetch DRAM streams overlap the merge window
+                pf_ns = 0.0
+
+            compute_ns = ch_busy.max()
+            if len(act) and ch_busy.max() > 0:
+                idle_num += (ch_busy.max() - ch_busy.min())
+                idle_den += ch_busy.max()
+            hop_ns = compute_ns + merge_ns + host_ns + pf_ns
+            t_part += merge_ns + host_ns
+            batch_time += hop_ns
+
+        tot_time_ns += batch_time
+        lat_sum_ns += batch_time * len(batch)
+
+    n_q = q_total
+    qps = n_q / (tot_time_ns * 1e-9) if tot_time_ns else 0.0
+    scale = 1e-3 / n_q  # ns total -> us per query
+    return SimResult(
+        name=name,
+        qps=qps,
+        avg_latency_us=lat_sum_ns / n_q * 1e-3,
+        t_neighbor_us=t_nb * scale,
+        t_distance_us=t_dist * scale,
+        t_partial_us=t_part * scale,
+        lnc_t_hit=float(np.mean([c.hit_rate for c in lnc_t])),
+        lnc_d_hit=float(np.mean([c.hit_rate for c in lnc_d])),
+        prefetch_hit=float(pf_hits.sum() / max(pf_attempts.sum(), 1)),
+        prefetch_hit_by_hop=np.divide(pf_hits, np.maximum(pf_attempts, 1)),
+        idle_frac=float(idle_num / max(idle_den, 1e-9)),
+        dram_bytes_per_query=dram_bytes / n_q,
+        energy_uj_per_query=energy_pj * 1e-6 / n_q,
+    )
+
+
+def simulate_platform(traces: dict, dim: int, hw: PlatformConfig,
+                      bytes_per_feature: float = 4.0, name: str | None = None,
+                      extra_hop_ns: float = 0.0) -> SimResult:
+    """Roofline model of the same trace on CPU/GPU/ASIC platforms (Fig. 15/16).
+
+    Platforms compute full-dimension distances (no FEE) unless the trace's
+    ``segs`` says otherwise; SCANN-style quantization is expressed through
+    ``bytes_per_feature``.
+    """
+    node = np.asarray(traces["node"])
+    nbrs = np.asarray(traces["nbrs"])
+    q_total = node.shape[0]
+    n_eval = (nbrs >= 0).sum(axis=(1, 2))           # per query
+    hops = (node >= 0).sum(axis=1)
+
+    w_bytes = n_eval * dim * bytes_per_feature
+    w_flops = n_eval * dim * 3.0                    # sub, mul, add
+    t_mem = w_bytes / hw.mem_bw_gbps                # ns (GB/s == B/ns)
+    t_cmp = w_flops / hw.flops_gflops
+    t_trav = hops * (hw.traversal_ns_per_hop + extra_hop_ns)
+    lat = np.maximum(t_mem, t_cmp) + t_trav
+    # steady state: batch_parallel queries in flight, capped by the memory
+    # roofline (aggregate bandwidth / bytes per query)
+    qps = hw.batch_parallel * 1e9 / max(lat.mean(), 1e-9)
+    qps = min(qps, 1e9 * hw.mem_bw_gbps / max(w_bytes.mean(), 1.0))
+    energy = (w_bytes.mean() * 8 * hw.e_mem_pj_per_bit
+              + n_eval.mean() * dim * hw.e_fpu_pj_per_feature
+              + hw.e_static_w * lat.mean() / max(hw.batch_parallel, 1))
+    return SimResult(
+        name=name or hw.name, qps=qps, avg_latency_us=lat.mean() * 1e-3,
+        t_neighbor_us=t_trav.mean() * 1e-3 * 0.6,
+        t_distance_us=np.maximum(t_mem, t_cmp).mean() * 1e-3,
+        t_partial_us=t_trav.mean() * 1e-3 * 0.4,
+        lnc_t_hit=0.0, lnc_d_hit=0.0, prefetch_hit=0.0,
+        prefetch_hit_by_hop=np.zeros(1), idle_frac=0.0,
+        dram_bytes_per_query=float(w_bytes.mean()),
+        energy_uj_per_query=float(energy * 1e-6),
+    )

@@ -1,0 +1,3 @@
+from repro.training.optim import OptConfig, apply_updates, init_opt_state  # noqa: F401
+from repro.training.compress import GradCompressor  # noqa: F401
+from repro.training.train_step import TrainState, init_state, make_train_step  # noqa: F401

@@ -1,0 +1,31 @@
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))          # proptest shim
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+
+@pytest.fixture(scope="session")
+def unit_db():
+    from repro.data.synthetic import make_dataset
+    return make_dataset("unit")
+
+
+@pytest.fixture(scope="session")
+def unit_ip_db():
+    from repro.data.synthetic import make_dataset
+    return make_dataset("unit_ip")
+
+
+@pytest.fixture(scope="session")
+def unit_index(unit_db):
+    from repro.core import vdzip
+    return vdzip.build(unit_db, m=8, seg=16, dfloat_recall_target=None)
+
+
+@pytest.fixture(scope="session")
+def unit_index_dfloat(unit_db):
+    from repro.core import vdzip
+    return vdzip.build(unit_db, m=8, seg=16, dfloat_recall_target=0.80, ef_fit=32)

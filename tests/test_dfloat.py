@@ -1,0 +1,98 @@
+"""Dfloat (paper §IV-B): emulation/packing equivalence, error monotonicity,
+layout rules, Algorithm-1 search behavior."""
+import numpy as np
+import pytest
+
+from proptest import given
+from repro.core import dfloat as dfl
+
+
+@given(n_cases=20)
+def test_pack_unpack_matches_emulate(draw):
+    d = draw.choice([32, 64, 128], "d")
+    n = draw.integers(3, 40, "n")
+    x = draw.array((n, d), scale=np.exp(draw.floats(-3, 3, "logscale")))
+    w1 = draw.choice([32, 24, 21, 18], "w1")
+    w2 = draw.choice([18, 16, 14, 12], "w2")
+    n1 = draw.integers(1, d - 1, "n1")
+    cfg = dfl.make_config(d, [(w1, dfl.EXP_BITS[w1], n1),
+                              (w2, dfl.EXP_BITS[w2], d - n1)], x)
+    em = dfl.emulate_db(x, cfg)
+    un = dfl.unpack_db(dfl.pack_db(x, cfg), cfg)
+    assert np.array_equal(em, un), "bitstream decode must be bit-exact vs emulation"
+
+
+@given(n_cases=10)
+def test_quantization_error_monotone_in_mantissa(draw):
+    x = draw.array((64, 32), scale=2.0)
+    errs = []
+    for n_man in (4, 7, 10, 15, 23):
+        cfg = dfl.make_config(32, [(1 + 8 + n_man, 8, 32)], x)
+        em = dfl.emulate_db(x, cfg)
+        errs.append(np.abs(em - x).mean())
+    assert all(errs[i] >= errs[i + 1] - 1e-9 for i in range(len(errs) - 1)), errs
+
+
+def test_fp32_roundtrip_exact():
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal((50, 64)) * np.exp(rng.uniform(-20, 20, (50, 64)))
+         ).astype(np.float32)
+    cfg = dfl.fp32_config(64)
+    assert np.array_equal(dfl.emulate_db(x, cfg), x)
+    assert np.array_equal(dfl.unpack_db(dfl.pack_db(x, cfg), cfg), x)
+
+
+def test_zero_and_sign_handling():
+    x = np.array([[0.0, -0.0, 1.5, -1.5, 1e-30, -3.25]], np.float32)
+    cfg = dfl.make_config(6, [(16, 5, 6)], x)
+    em = dfl.emulate_db(x, cfg)
+    assert em[0, 0] == 0.0 and em[0, 1] == 0.0
+    assert em[0, 2] > 0 and em[0, 3] < 0 and em[0, 5] < 0
+    assert em[0, 4] == 0.0, "tiny values flush to zero"
+    assert np.array_equal(dfl.unpack_db(dfl.pack_db(x, cfg), cfg), em)
+
+
+def test_burst_accounting_rules():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((10, 128)).astype(np.float32)
+    cfg = dfl.make_config(128, [(18, 6, 42), (14, 5, 32), (16, 5, 54)], x)
+    # rule 1/4: per-segment ceil(dims / floor(128/width)), rounded to devices
+    per = [128 // 18, 128 // 14, 128 // 16]
+    expect = -(-42 // per[0]) + -(-32 // per[1]) + -(-54 // per[2])
+    expect = -(-expect // 4) * 4
+    assert cfg.bursts_per_vector() == expect
+    assert cfg.bursts_for_prefix(128) <= cfg.bursts_per_vector()
+    # prefix monotone
+    pre = [cfg.bursts_for_prefix(k) for k in range(0, 129, 16)]
+    assert all(a <= b for a, b in zip(pre, pre[1:]))
+    fp32 = dfl.fp32_config(128)
+    assert cfg.total_bits() < fp32.total_bits()
+
+
+def test_layouts_validation_rules():
+    for nb in (16, 20, 24, 32):
+        for layout in dfl._layouts_for_bursts(128, nb, 128):
+            widths = [w for w, _ in layout]
+            assert widths == sorted(widths, reverse=True), "rule 3: non-increasing"
+            assert sum(b for _, b in layout) == nb, "fills exactly N_burst"
+            cover = sum((128 // w) * b for w, b in layout)
+            assert cover >= 128, "covers all features"
+
+
+def test_algorithm1_search_reduces_bursts():
+    """Alg. 1 on a synthetic DB with a distance-ordering recall proxy."""
+    rng = np.random.default_rng(3)
+    db = (rng.standard_normal((400, 64)) * np.linspace(2, 0.05, 64)).astype(np.float32)
+    q = db[:32] + 0.1 * rng.standard_normal((32, 64)).astype(np.float32)
+    exact = ((q[:, None] - db[None]) ** 2).sum(-1)
+    gt = np.argsort(exact, 1)[:, :10]
+
+    def recall_fn(db_em):
+        d2 = ((q[:, None] - db_em[None]) ** 2).sum(-1)
+        top = np.argsort(d2, 1)[:, :10]
+        return np.mean([len(set(a) & set(b)) / 10 for a, b in zip(top, gt)])
+
+    cfg, log = dfl.search_config(db, recall_fn, r_target=0.95)
+    assert recall_fn(dfl.emulate_db(db, cfg)) >= 0.95
+    assert cfg.bursts_per_vector() <= dfl.fp32_config(64).bursts_per_vector()
+    assert len(log) > 1, "search actually explored configs"

@@ -1,0 +1,58 @@
+"""Graph construction + DaM partition invariants (paper Fig. 12)."""
+import numpy as np
+
+from proptest import given
+from repro.core import graph as gmod
+
+
+def test_knn_graph_basic(unit_db):
+    adj = gmod._knn_adjacency(unit_db.vectors[:500], 8, "l2")
+    assert adj.shape == (500, 8)
+    assert (adj != np.arange(500)[:, None]).all(), "no self loops"
+    # first neighbor is the true nearest
+    d = ((unit_db.vectors[:50, None] - unit_db.vectors[None, :500]) ** 2).sum(-1)
+    d[np.arange(50), np.arange(50)] = np.inf
+    np.testing.assert_array_equal(adj[:50, 0], d.argmin(1))
+
+
+def test_hierarchy_levels(unit_db):
+    g = gmod.build_graph(unit_db.vectors, m=8, metric="l2", prune=False)
+    assert len(g.levels) >= 2
+    sizes = [len(ids) for ids, _ in g.levels]
+    assert all(a > b for a, b in zip(sizes, sizes[1:])), "levels shrink"
+    assert g.entry in g.levels[-1][0]
+
+
+@given(n_cases=8)
+def test_dam_partition_invariants(draw):
+    n = draw.integers(50, 400, "n")
+    m = draw.choice([4, 8], "m")
+    c = draw.choice([2, 4, 8], "channels")
+    rng = np.random.default_rng(draw.integers(0, 1000, "seed"))
+    adj = rng.integers(0, n, (n, m)).astype(np.int32)
+    owner = gmod.map_owners(n, c, "shuffle", seed=draw.integers(0, 99, "oseed"))
+    dam = gmod.build_dam(adj, owner, c)
+
+    # 1. ownership is a partition
+    sizes = [len(ids) for ids in dam.local_ids]
+    assert sum(sizes) == n
+    assert max(sizes) - min(sizes) <= 1, "shuffle policy balances shards"
+
+    # 2. every neighbor appears in exactly one channel partition, local slot
+    #    resolves to the right global id (vector+list co-location, Fig. 12)
+    for v in rng.integers(0, n, 10):
+        collected = []
+        for ch in range(c):
+            for slot in dam.part_adj[ch][v]:
+                if slot >= 0:
+                    gid = dam.local_ids[ch][slot]
+                    assert owner[gid] == ch, "DaM co-location violated"
+                    collected.append(int(gid))
+        assert sorted(collected) == sorted(adj[v].tolist())
+
+
+def test_contiguous_mapping_preserves_locality():
+    owner = gmod.map_owners(100, 4, "contiguous")
+    assert (np.diff(owner) >= 0).all()
+    sizes = np.bincount(owner, minlength=4)
+    assert sizes.sum() == 100

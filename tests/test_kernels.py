@@ -1,0 +1,83 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from proptest import given
+from repro.core import dfloat as dfl
+from repro.kernels import ref as ref_ops
+from repro.kernels.dfloat_unpack import dfloat_unpack_pallas
+from repro.kernels.fee_distance import fee_distance_pallas
+
+SHAPES = [(7, 32, 8), (100, 128, 16), (129, 128, 16), (64, 960, 32), (256, 64, 16)]
+
+
+@pytest.mark.parametrize("c,d,seg", SHAPES)
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_fee_distance_kernel_vs_ref(c, d, seg, metric):
+    rng = np.random.default_rng(c + d)
+    s = d // seg
+    q = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((c, d)), jnp.float32)
+    alpha = jnp.asarray(1.0 + 1.0 / np.arange(1, s + 1), jnp.float32)
+    beta = jnp.asarray(1.0 + 0.2 / np.arange(1, s + 1), jnp.float32)
+    margin = jnp.zeros(s, jnp.float32)
+    base = np.median(np.asarray(((x - q) ** 2).sum(1))) if metric == "l2" \
+        else -np.median(np.asarray(x @ q))
+    thr = jnp.float32(base)
+    got = fee_distance_pallas(q, x, thr, alpha, beta, margin, seg=seg,
+                              metric=metric, tile_c=64)
+    want = ref_ops.fee_distance_ref(q, x, thr, alpha, beta, margin, seg=seg,
+                                    metric=metric)
+    np.testing.assert_allclose(got[0], want[0], rtol=3e-5, atol=2e-4)
+    assert np.array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    assert np.array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fee_distance_kernel_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    c, d, seg = 64, 128, 16
+    q = jnp.asarray(rng.standard_normal(d)).astype(dtype)
+    x = jnp.asarray(rng.standard_normal((c, d))).astype(dtype)
+    s = d // seg
+    ones = jnp.ones(s, jnp.float32)
+    got = fee_distance_pallas(q.astype(jnp.float32), x.astype(jnp.float32),
+                              jnp.float32(d / 2), ones * 1.2, ones, ones * 0,
+                              seg=seg, metric="l2")
+    want = ref_ops.fee_distance_ref(q.astype(jnp.float32), x.astype(jnp.float32),
+                                    jnp.float32(d / 2), ones * 1.2, ones, ones * 0,
+                                    seg=seg, metric="l2")
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-4, atol=1e-3)
+
+
+@given(n_cases=12)
+def test_dfloat_unpack_kernel_bit_exact(draw):
+    d = draw.choice([32, 64, 128, 256], "d")
+    n = draw.integers(3, 70, "n")
+    x = draw.array((n, d), scale=np.exp(draw.floats(-2, 2, "logscale")))
+    widths = sorted({draw.choice([32, 24, 21, 18, 16, 14, 12], f"w{i}")
+                     for i in range(draw.integers(1, 3, "nseg"))}, reverse=True)
+    runs, left = [], d
+    for i, w in enumerate(widths):
+        nd = left if i == len(widths) - 1 else max(1, left // (len(widths) - i))
+        runs.append((w, dfl.EXP_BITS[w], nd))
+        left -= nd
+    cfg = dfl.make_config(d, runs, x)
+    packed = dfl.pack_db(x, cfg)
+    want = ref_ops.dfloat_unpack_ref(packed, cfg)
+    got = np.asarray(dfloat_unpack_pallas(jnp.asarray(packed), cfg, tile_c=32))
+    assert np.array_equal(got, want)
+
+
+def test_ops_dispatch_cpu_uses_ref():
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal(32), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
+    ones = jnp.ones(2, jnp.float32)
+    d1 = ops.fee_distance(q, x, jnp.float32(1e9), ones, ones, ones * 0,
+                          seg=16, metric="l2")
+    d2 = ops.fee_distance(q, x, jnp.float32(1e9), ones, ones, ones * 0,
+                          seg=16, metric="l2", backend="jnp")
+    np.testing.assert_allclose(d1[0], d2[0], rtol=1e-6)

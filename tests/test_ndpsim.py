@@ -1,0 +1,96 @@
+"""NDP performance-model invariants: each paper technique must help in the
+direction the paper claims (Fig. 18/21/25), and the cache model is a real LRU."""
+import numpy as np
+import pytest
+
+from repro.core import graph as gmod
+from repro.core.dfloat import fp32_config
+from repro.ndpsim import SetAssocCache, SimFlags, simulate_ndp
+from repro.ndpsim.timing import NASZIP_2CH
+
+
+def test_cache_lru_semantics():
+    c = SetAssocCache(4 * 64, 64, ways=4)    # 4 lines, fully assoc
+    for addr in (0, 64, 128, 192):
+        assert c.access(addr) == 1           # cold misses
+    assert c.access(0) == 0                  # hit
+    c.access(256)                            # evicts LRU (=64)
+    assert c.access(0) == 0
+    assert c.access(64) == 1, "LRU victim was 64"
+
+
+def test_cache_multi_line_spans():
+    c = SetAssocCache(1024, 64)
+    assert c.access(0, 200) == 4             # 4 lines
+    assert c.access(0, 200) == 0
+
+
+def test_hit_rate_increases_with_capacity():
+    rng = np.random.default_rng(0)
+    addrs = rng.zipf(1.3, 20000) * 64 % (1 << 24)
+    rates = []
+    for cap in (4 * 1024, 32 * 1024, 256 * 1024):
+        c = SetAssocCache(cap, 64, ways=8)
+        for a in addrs:
+            c.access(int(a))
+        rates.append(c.hit_rate)
+    assert rates[0] < rates[1] <= rates[2] + 1e-9, rates
+
+
+@pytest.fixture(scope="module")
+def sim_inputs(unit_db, unit_index):
+    out = unit_index.search(unit_db.queries[:48], ef=32, k=10, use_fee=True,
+                            trace=True)
+    owner = gmod.map_owners(unit_db.n, NASZIP_2CH.n_subchannels, "shuffle")
+    return out["trace"], owner, unit_index
+
+
+def _run(sim_inputs, **kw):
+    trace, owner, idx = sim_inputs
+    flags = SimFlags(**kw)
+    return simulate_ndp(trace, owner, idx.graph.base_adjacency, NASZIP_2CH,
+                        flags, idx.dfloat_cfg, idx.seg)
+
+
+def test_dam_reduces_latency(sim_inputs):
+    on = _run(sim_inputs, dam=True, lnc=False, prefetch=False)
+    off = _run(sim_inputs, dam=False, lnc=False, prefetch=False)
+    assert on.qps > off.qps, (on.qps, off.qps)
+    assert on.t_partial_us < off.t_partial_us, "DaM cuts host/cross-channel time"
+
+
+def test_lnc_reduces_neighbor_latency(sim_inputs):
+    on = _run(sim_inputs, dam=True, lnc=True, prefetch=False)
+    off = _run(sim_inputs, dam=True, lnc=False, prefetch=False)
+    assert on.t_neighbor_us < off.t_neighbor_us
+    assert 0.0 < on.lnc_d_hit <= 1.0
+
+
+def test_prefetch_hits_bounded_and_helpful(sim_inputs):
+    on = _run(sim_inputs, dam=True, lnc=True, prefetch=True)
+    assert 0.0 <= on.prefetch_hit <= 1.0
+    assert on.prefetch_hit > 0.3, "locality should give real prefetch coverage"
+
+
+def test_dfloat_reduces_dram_traffic(unit_db, unit_index_dfloat):
+    out = unit_index_dfloat.search(unit_db.queries[:32], ef=32, k=10,
+                                   use_fee=True, trace=True)
+    owner = gmod.map_owners(unit_db.n, NASZIP_2CH.n_subchannels, "shuffle")
+    flags = SimFlags()
+    with_df = simulate_ndp(out["trace"], owner,
+                           unit_index_dfloat.graph.base_adjacency, NASZIP_2CH,
+                           flags, unit_index_dfloat.dfloat_cfg, 16)
+    no_df = simulate_ndp(out["trace"], owner,
+                         unit_index_dfloat.graph.base_adjacency, NASZIP_2CH,
+                         flags, fp32_config(unit_db.dim), 16)
+    assert with_df.dram_bytes_per_query < no_df.dram_bytes_per_query
+
+
+def test_batch_tradeoff(sim_inputs):
+    small = _run(sim_inputs, batch=1)
+    big = _run(sim_inputs, batch=16)
+    # paper Fig. 22/23: batching raises throughput and evens load
+    assert big.qps >= small.qps
+    assert big.idle_frac <= small.idle_frac + 1e-9
+    # but latency per query grows with batch (hop-synchronized batches)
+    assert big.avg_latency_us >= small.avg_latency_us * 0.9

@@ -1,0 +1,105 @@
+"""FEE-sPCA properties: alpha/beta math (paper Eq. 2-6) and exit semantics."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from proptest import given
+from repro.core import fee as fee_mod
+from repro.core import pca as pca_mod
+
+
+@given(n_cases=10)
+def test_pca_preserves_distances(draw):
+    n = draw.integers(50, 200, "n")
+    d = draw.choice([16, 32, 64], "d")
+    x = draw.array((n, d), scale=draw.floats(0.5, 3.0, "scale"))
+    spca = pca_mod.fit_spca(x, "l2")
+    xr = spca.transform(x)
+    d_orig = ((x[:10, None] - x[None, :10]) ** 2).sum(-1)
+    d_rot = ((xr[:10, None] - xr[None, :10]) ** 2).sum(-1)
+    np.testing.assert_allclose(d_rot, d_orig, rtol=2e-3, atol=1e-3)
+
+
+@given(n_cases=10)
+def test_pca_preserves_ip(draw):
+    n, d = draw.integers(50, 150, "n"), 32
+    x = draw.array((n, d))
+    spca = pca_mod.fit_spca(x, "ip")
+    xr = spca.transform(x)
+    np.testing.assert_allclose(xr[:10] @ xr[:20].T, x[:10] @ x[:20].T,
+                               rtol=2e-3, atol=1e-3)
+
+
+def test_eigvals_sorted_and_alpha_monotone():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((500, 64)).astype(np.float32) * np.linspace(3, 0.1, 64)
+    spca = pca_mod.fit_spca(x, "l2")
+    assert (np.diff(spca.eigvals) <= 1e-6).all(), "eigvals must be descending"
+    alpha = spca.alpha(np.arange(1, 65))
+    assert (alpha >= 1.0 - 1e-6).all()
+    assert (np.diff(alpha) <= 1e-5).all(), "alpha_k decreases with k"
+    assert abs(alpha[-1] - 1.0) < 1e-6
+
+
+def test_energy_expectation_property():
+    """Eq. 2: E(||v_1:d||^2/||v||^2) = sum(lam_1:d)/sum(lam)."""
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((4000, 32)).astype(np.float64) * np.linspace(2, 0.1, 32)
+    spca = pca_mod.fit_spca(x, "l2")
+    xr = spca.transform(x).astype(np.float64)
+    for k in (4, 8, 16):
+        measured = ((xr[:, :k] ** 2).sum(1) / (xr**2).sum(1)).mean()
+        predicted = spca.eigvals[:k].sum() / spca.eigvals.sum()
+        assert abs(measured - predicted) < 0.02, (k, measured, predicted)
+
+
+def test_beta_ge_one_and_protects(unit_db, unit_index):
+    fit = unit_index.fee_fit
+    assert (fit["beta"] >= 1.0 - 1e-6).all()
+    assert fit["beta"][-1] == pytest.approx(1.0)
+    # P(est < d_all) >= p_target on held-out pairs (the Chebyshev guarantee)
+    rng = np.random.default_rng(2)
+    db_rot = unit_index.db_rot
+    q = unit_index.transform_queries(unit_db.queries[:32])
+    cum, full = pca_mod.partial_scores(db_rot[rng.choice(len(db_rot), 256)], q, 16, "l2")
+    est = fit["alpha"][None, None] * cum / fit["beta"][None, None]
+    frac_safe = (est[:, :, :-1] <= full[:, :, None] + 1e-9).mean()
+    assert frac_safe >= fit["p_target"] - 0.05, frac_safe
+
+
+@given(n_cases=15)
+def test_fee_distance_semantics(draw):
+    """Survivor scores are exact; rejected iff some prefix estimate crosses."""
+    c = draw.integers(4, 64, "c")
+    s = draw.choice([2, 4, 8], "segs")
+    seg = draw.choice([4, 8, 16], "seg")
+    d = s * seg
+    q = draw.array((d,))
+    x = draw.array((c, d))
+    alpha = np.linspace(2.0, 1.0, s).astype(np.float32)
+    beta = np.ones(s, np.float32) * draw.floats(1.0, 1.5, "beta")
+    beta[-1] = 1.0
+    thr = np.float32(draw.floats(0.3, 2.0, "thr") * d)
+    score, rejected, segs_used = fee_mod.fee_distance(
+        jnp.asarray(q), jnp.asarray(x), thr, jnp.asarray(alpha),
+        jnp.asarray(beta), jnp.zeros(s, jnp.float32), seg=seg, metric="l2")
+    score, rejected, segs_used = map(np.asarray, (score, rejected, segs_used))
+    exact = ((x - q) ** 2).sum(-1)
+    np.testing.assert_allclose(score, exact, rtol=1e-4, atol=1e-4)
+    cum = ((x - q) ** 2).reshape(c, s, seg).sum(-1).cumsum(1)
+    est = alpha * cum / beta
+    expect_rej = (est[:, :-1] >= thr).any(1)
+    assert (rejected == expect_rej).all()
+    assert (segs_used >= 1).all() and (segs_used <= s).all()
+    assert (segs_used[~rejected] == s).all(), "survivors touch all segments"
+
+
+def test_fee_never_rejects_with_inf_threshold(unit_index):
+    x = unit_index.db_rot[:100]
+    q = unit_index.db_rot[101]
+    fit = unit_index.fee_fit
+    _, rej, _ = fee_mod.fee_distance(
+        jnp.asarray(q), jnp.asarray(x), jnp.float32(3e38),
+        jnp.asarray(fit["alpha"]), jnp.asarray(fit["beta"]),
+        jnp.asarray(fit["margin"]), seg=16, metric="l2")
+    assert not np.asarray(rej).any()

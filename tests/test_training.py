@@ -1,0 +1,112 @@
+"""Training substrate: optimizers converge, microbatching is exact,
+gradient compression with error feedback preserves convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import (GradCompressor, OptConfig, init_state,
+                            make_train_step)
+from repro.training import optim
+
+
+def _toy_loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    loss = ((pred - batch["y"]) ** 2).mean()
+    return loss, dict(loss=loss)
+
+
+def _toy_setup(seed=0, n=256, d=16):
+    rng = np.random.default_rng(seed)
+    w_true = rng.standard_normal((d, 1)).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = x @ w_true + 0.01 * rng.standard_normal((n, 1)).astype(np.float32)
+    params = dict(w=jnp.zeros((d, 1)), b=jnp.zeros((1,)))
+    return params, dict(x=jnp.asarray(x), y=jnp.asarray(y))
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor"])
+def test_optimizer_converges(opt_name):
+    params, batch = _toy_setup()
+    opt_cfg = OptConfig(name=opt_name, lr=3e-2, weight_decay=0.0)
+    state = init_state(params, opt_cfg)
+    step = jax.jit(make_train_step(_toy_loss, opt_cfg))
+    losses = []
+    for _ in range(150):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.05 * losses[0], (opt_name, losses[0], losses[-1])
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    params, batch = _toy_setup()
+    opt_cfg = OptConfig(name="adamw", lr=1e-2, weight_decay=0.0)
+    s1 = init_state(params, opt_cfg)
+    s4 = init_state(params, opt_cfg)
+    step1 = jax.jit(make_train_step(_toy_loss, opt_cfg, microbatch=1))
+    step4 = jax.jit(make_train_step(_toy_loss, opt_cfg, microbatch=4))
+    for _ in range(5):
+        s1, m1 = step1(s1, batch)
+        s4, m4 = step4(s4, batch)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s4.params)):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
+
+
+def test_compressed_grads_error_feedback_converges():
+    params, batch = _toy_setup()
+    opt_cfg = OptConfig(name="adamw", lr=3e-2, weight_decay=0.0)
+    comp = GradCompressor(bits=8)
+    state = init_state(params, opt_cfg, comp)
+    step = jax.jit(make_train_step(_toy_loss, opt_cfg, compressor=comp))
+    for _ in range(150):
+        state, m = step(state, batch)
+    assert float(m["loss"]) < 0.01, float(m["loss"])
+    # error feedback residual actually carries information
+    assert any(float(jnp.abs(e).max()) > 0 for e in jax.tree.leaves(state.error_fb))
+
+
+def test_compression_quantizes_to_levels():
+    comp = GradCompressor(bits=8)
+    g = dict(w=jnp.asarray(np.random.default_rng(0).standard_normal((64,)),
+                           jnp.float32))
+    e = comp.init_error(g)
+    deq, err = comp.compress_decompress(g, e)
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127
+    lv = np.asarray(deq["w"]) / scale
+    np.testing.assert_allclose(lv, np.round(lv), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(deq["w"]) + np.asarray(err["w"]),
+                               np.asarray(g["w"]), rtol=1e-6, atol=1e-7)
+
+
+def test_adafactor_state_is_factored():
+    params = dict(w=jnp.zeros((32, 16)), b=jnp.zeros((16,)))
+    st = optim.init_opt_state(params, OptConfig(name="adafactor"))
+    assert st["v"]["w"]["vr"].shape == (32,)
+    assert st["v"]["w"]["vc"].shape == (16,)
+    assert st["v"]["b"]["v"].shape == (16,)
+    n_state = sum(x.size for x in jax.tree.leaves(st))
+    n_param = sum(x.size for x in jax.tree.leaves(params))
+    assert n_state < 0.2 * n_param, "factored state must be tiny vs adam's 2x"
+
+
+def test_smoke_arch_loss_decreases():
+    """20 steps on a tiny llama: loss strictly improves (end-to-end check)."""
+    from repro import configs as C
+    from repro.data.pipeline import TokenPipeline
+    from repro.models.registry import get_model
+
+    cfg = C.get_smoke("llama3.2-1b")
+    api = get_model(cfg)
+    params = api.init(jax.random.key(0))
+    opt_cfg = OptConfig(name="adamw", lr=1e-3)
+    state = init_state(params, opt_cfg)
+    step = jax.jit(make_train_step(api.loss, opt_cfg))
+    pipe = TokenPipeline(cfg.vocab, 8, 32, seed=0)
+    first = last = None
+    for i in range(20):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}  # overfit one batch
+        state, m = step(state, batch)
+        if first is None:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 0.5, (first, last)
