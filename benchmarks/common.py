@@ -10,8 +10,8 @@ import time
 import numpy as np
 
 from repro.core import graph as gmod
-from repro.core import vdzip
 from repro.data.synthetic import make_dataset, recall_at_k
+from repro.index import Index, IndexSpec, SearchParams
 from repro.ndpsim import SimFlags, simulate_ndp, simulate_platform
 from repro.ndpsim.timing import NASZIP_2CH
 from repro.utils import cache_path
@@ -25,9 +25,10 @@ EF_GRID = (16, 24, 32, 48, 64, 96, 128, 192, 256)
 @functools.lru_cache(maxsize=None)
 def get_index(name: str, dfloat: bool = True):
     db = make_dataset(name)
-    idx = vdzip.build(db, m=16, seg=16 if db.dim % 16 == 0 else db.dim // 10,
-                      dfloat_recall_target=0.9 if dfloat else None,
-                      dfloat_proxy=True, cache_key=name)
+    spec = IndexSpec.for_db(db, m=16,
+                            dfloat_recall_target=0.9 if dfloat else None,
+                            dfloat_proxy=True)
+    idx = Index.build(db, spec, cache_key=name)
     return db, idx
 
 
@@ -41,8 +42,8 @@ def calibrated_ef(name: str, target: float = 0.9, use_fee: bool = True,
     db, idx = get_index(name)
     ef_pick = EF_GRID[-1]
     for ef in EF_GRID:
-        res = vdzip.evaluate(idx, db, ef=ef, k=10, use_fee=use_fee,
-                             use_dfloat=use_dfloat, trace=False)
+        res = idx.evaluate(db, SearchParams(ef=ef, k=10, use_fee=use_fee,
+                                            use_dfloat=use_dfloat))
         if res["recall"] >= target:
             ef_pick = ef
             break
@@ -56,9 +57,9 @@ def get_traces(name: str, ef: int = 0, use_fee: bool = True,
     db, idx = get_index(name)
     ef = ef or calibrated_ef(name, use_fee=use_fee, use_dfloat=use_dfloat)
     q = db.queries[: (n_queries or N_QUERIES)]
-    out = idx.search(q, ef=ef, k=10, use_fee=use_fee, use_dfloat=use_dfloat,
-                     trace=True)
-    rec = recall_at_k(out["ids"], db.gt[: len(q)], 10)
+    out = idx.search(q, SearchParams(ef=ef, k=10, use_fee=use_fee,
+                                     use_dfloat=use_dfloat, trace=True))
+    rec = recall_at_k(out.ids, db.gt[: len(q)], 10)
     return db, idx, out, ef, rec
 
 
@@ -71,7 +72,7 @@ def ndp_sim(name: str, flags: SimFlags | None = None, hw=NASZIP_2CH,
     owner = gmod.map_owners(db.n, hw.n_subchannels, owner_policy)
     from repro.core.dfloat import fp32_config
     cfg = idx.dfloat_cfg if use_dfloat else fp32_config(db.dim)
-    r = simulate_ndp(out["trace"], owner, idx.graph.base_adjacency, hw,
+    r = simulate_ndp(out, owner, idx.graph.base_adjacency, hw,
                      flags or SimFlags(), cfg, idx.seg)
     return r, rec, ef
 

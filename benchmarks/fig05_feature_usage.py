@@ -1,25 +1,18 @@
 """Fig. 5: fraction of features computed per distance evaluation at
 recall@10 >= 0.9, for HNSW variants (exact / FEE-d_part / FEE-sPCA)."""
-import numpy as np
-
 from benchmarks.common import BENCH_DATASETS, get_index, get_traces
-from repro.core import pca as pca_mod
-from repro.data.synthetic import recall_at_k
+from repro.index import FeeParams, SearchParams
 
 
 def fee_dpart_usage(name: str, ef: int) -> float:
     """Plain FEE baseline (ANSMET-style): exit when the raw partial distance
     d_part crosses the threshold — alpha=beta=1 (no estimation)."""
     db, idx = get_index(name)
-    import repro.core.search as sm
-    fee_raw = dict(alpha=np.ones_like(idx.fee_fit["alpha"]),
-                   beta=np.ones_like(idx.fee_fit["beta"]),
-                   margin=np.zeros_like(idx.fee_fit["margin"]))
-    cfg = sm.SearchConfig(ef=ef, k=10, metric=db.metric, seg=idx.seg, use_fee=True)
-    out = sm.run_search(idx.db_rot, idx.graph,
-                        idx.transform_queries(db.queries[:128]), cfg,
-                        fee_params=fee_raw, trace=True)
-    return float(out["dims"].sum() / max(out["n_eval"].sum(), 1) / db.dim)
+    run = idx.searcher("local",
+                       SearchParams(ef=ef, k=10, use_dfloat=False, trace=True),
+                       fee=FeeParams.identity(db.dim // idx.seg))
+    out = run(db.queries[:128])
+    return float(out.dims.sum() / max(out.n_eval.sum(), 1) / db.dim)
 
 
 def main(csv):
@@ -28,7 +21,7 @@ def main(csv):
     for name in BENCH_DATASETS:
         def run(name=name):
             db, idx, out, ef, rec = get_traces(name, use_fee=True, use_dfloat=False)
-            spca_use = float(out["dims"].sum() / max(out["n_eval"].sum(), 1) / db.dim)
+            spca_use = float(out.dims.sum() / max(out.n_eval.sum(), 1) / db.dim)
             dpart_use = fee_dpart_usage(name, ef)
             row = dict(exact=1.0, fee_dpart=round(dpart_use, 3),
                        fee_spca=round(spca_use, 3), recall=round(rec, 3), ef=ef)

@@ -12,14 +12,14 @@ def main(csv):
     for name in BENCH_DATASETS:
         def run(name=name):
             db, idx, out, ef, rec = get_traces(name, use_fee=True, use_dfloat=False)
-            segs = out["trace"]["segs"]
+            segs = out.trace["segs"]
             seg = idx.seg
             exits = segs[segs > 0] * seg                 # dims at exit/finish
             hist = np.bincount(exits // seg, minlength=db.dim // seg + 1)
             cum = np.cumsum(hist) / hist.sum()
             p80 = int(np.searchsorted(cum, 0.8) * seg)
             mean_dims = float(exits.mean())
-            var = idx.fee_fit["var_k"]
+            var = idx.fee.var_k
             print(f"{name:10s} {db.dim:5d} {p80:13d} {mean_dims:10.1f} "
                   f"{var[0]:9.4f} {var[-1]:10.4f}")
             return dict(dim=db.dim, p80_exit_dim=p80, mean_dims=round(mean_dims, 1))

@@ -14,16 +14,16 @@ def platform_rows(name: str):
     db, idx, out, ef, rec = get_traces(name, use_fee=True, use_dfloat=True)
     db2, idx2, out_nofee, _, _ = get_traces(name, use_fee=False, use_dfloat=False)
     rows = {}
-    rows["cpu-baseline"] = simulate_platform(out_nofee["trace"], db.dim, T.CPU_BASELINE)
-    rows["cpu-scann"] = simulate_platform(out_nofee["trace"], db.dim, T.CPU_SCANN,
+    rows["cpu-baseline"] = simulate_platform(out_nofee, db.dim, T.CPU_BASELINE)
+    rows["cpu-scann"] = simulate_platform(out_nofee, db.dim, T.CPU_SCANN,
                                           bytes_per_feature=1.0)
-    rows["cpu-hp"] = simulate_platform(out_nofee["trace"], db.dim, T.CPU_HP,
+    rows["cpu-hp"] = simulate_platform(out_nofee, db.dim, T.CPU_HP,
                                        bytes_per_feature=1.0)
-    rows["gpu-cagra"] = simulate_platform(out_nofee["trace"], db.dim, T.GPU_A100)
-    rows["anna-asic"] = simulate_platform(out_nofee["trace"], db.dim, T.ANNA_ASIC,
+    rows["gpu-cagra"] = simulate_platform(out_nofee, db.dim, T.GPU_A100)
+    rows["anna-asic"] = simulate_platform(out_nofee, db.dim, T.ANNA_ASIC,
                                           bytes_per_feature=1.0)
-    rows["pimann"] = simulate_platform(out_nofee["trace"], db.dim, T.PIMANN_UPMEM)
-    rows["dfgas"] = simulate_platform(out_nofee["trace"], db.dim, T.DFGAS_FPGA,
+    rows["pimann"] = simulate_platform(out_nofee, db.dim, T.PIMANN_UPMEM)
+    rows["dfgas"] = simulate_platform(out_nofee, db.dim, T.DFGAS_FPGA,
                                       bytes_per_feature=2.0)
     # NDP variants (trace-driven cycle model)
     rows["ndp-baseline"], _, _ = ndp_sim(name, SimFlags(dam=False, lnc=False, prefetch=False),

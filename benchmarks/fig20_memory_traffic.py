@@ -42,10 +42,10 @@ def main(csv):
                                                n_queries=64)
             _, _, out_plain, _, _ = get_traces(name, use_fee=False, use_dfloat=False,
                                                n_queries=64)
-            n_eval_plain = (out_plain["trace"]["nbrs"] >= 0).sum() / 64
+            n_eval_plain = (out_plain.trace["nbrs"] >= 0).sum() / 64
             hnsw_bytes = n_eval_plain * db.dim * 4
             # VD-Zip: bursts touched per eval (Dfloat+FEE)
-            segs = out["trace"]["segs"]
+            segs = out.trace["segs"]
             bursts = 0
             for s in np.unique(segs[segs > 0]):
                 bursts += (segs == s).sum() * idx.dfloat_cfg.bursts_for_prefix(int(s) * idx.seg)

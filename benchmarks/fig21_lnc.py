@@ -5,7 +5,8 @@ import dataclasses
 import numpy as np
 
 from benchmarks.common import get_index, get_traces
-from repro.core import graph as gmod, vdzip
+from repro.core import graph as gmod
+from repro.index import Index, SearchParams
 from repro.ndpsim import SimFlags, simulate_ndp
 from repro.ndpsim.timing import NASZIP_2CH
 
@@ -22,8 +23,8 @@ def main(csv):
             hw = dataclasses.replace(NASZIP_2CH, lnc_d_bytes=cap_kb * 1024)
             row = []
             for ef in (16, 32, 64, 128):
-                o = idx.search(db.queries[:96], ef=ef, k=10, use_fee=True, trace=True)
-                r = simulate_ndp(o["trace"], owner, idx.graph.base_adjacency, hw,
+                o = idx.search(db.queries[:96], SearchParams(ef=ef, k=10, trace=True))
+                r = simulate_ndp(o, owner, idx.graph.base_adjacency, hw,
                                  SimFlags(), idx.dfloat_cfg, idx.seg)
                 row.append((ef, round(r.lnc_d_hit, 3)))
             out[f"{cap_kb}KB"] = row
@@ -36,10 +37,11 @@ def main(csv):
     def run_b():
         out = {}
         for m in (8, 16, 32):
-            idx_m = vdzip.build(db, m=m, seg=idx.seg, dfloat_recall_target=None,
-                                cache_key=f"{name}-m{m}")
-            o = idx_m.search(db.queries[:96], ef=48, k=10, use_fee=True, trace=True)
-            r = simulate_ndp(o["trace"], owner, idx_m.graph.base_adjacency,
+            idx_m = Index.build(db, dataclasses.replace(
+                idx.spec, m=m, dfloat_recall_target=None),
+                cache_key=f"{name}-m{m}")
+            o = idx_m.search(db.queries[:96], SearchParams(ef=48, k=10, trace=True))
+            r = simulate_ndp(o, owner, idx_m.graph.base_adjacency,
                              NASZIP_2CH, SimFlags(), idx_m.dfloat_cfg, idx.seg)
             byhop = r.prefetch_hit_by_hop
             pts = [(h, round(float(byhop[h]), 3)) for h in

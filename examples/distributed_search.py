@@ -1,29 +1,23 @@
 """DaM-sharded distributed retrieval on a multi-device mesh (fake devices on
-CPU): the paper's Fig. 12 mapping as a shard_map program.
+CPU): the paper's Fig. 12 mapping as a shard_map program, reached through the
+unified ``Index.searcher(backend="sharded")`` call.
 
-  python examples/distributed_search.py          # 8 simulated devices
+  PYTHONPATH=src python examples/distributed_search.py   # 8 simulated devices
 """
 import os
-import sys
-from pathlib import Path
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
-
-import numpy as np
 
 
 def main():
     import jax
-    import jax.numpy as jnp
 
-    from repro.core import graph as gmod, vdzip
-    from repro.core.search import SearchConfig, descend_entry
-    from repro.data.synthetic import make_dataset, recall_at_k
-    from repro.distributed import retrieval as rt
+    from repro.core import graph as gmod
+    from repro.data.synthetic import make_dataset
+    from repro.index import Index, IndexSpec, SearchParams
 
     db = make_dataset("unit")
-    idx = vdzip.build(db, m=8, seg=16, dfloat_recall_target=None)
+    idx = Index.build(db, IndexSpec.for_db(db, m=8, dfloat_recall_target=None))
     n_shards = 4
     mesh = jax.make_mesh((2, n_shards), ("data", "model"))
     print(f"mesh: {mesh.devices.shape} (data x model); DB {db.n}x{db.dim}")
@@ -33,18 +27,11 @@ def main():
     print(f"DaM: {n_shards} shards, partition width {dam.max_part_width()} "
           f"(full lists M=8) — vector+list co-location per shard")
 
-    sdb = rt.build_sharded_db(idx.db_rot, dam)
-    cfg = SearchConfig(ef=48, k=10, metric=db.metric, seg=16, use_fee=True)
-    qr = idx.transform_queries(db.queries)
-    entries = descend_entry(idx.db_rot, idx.graph, qr, db.metric)
-    with jax.set_mesh(mesh):
-        searcher = rt.make_sharded_searcher(mesh, cfg, db.n, fee_params=idx.fee_fit)
-        sh = rt.db_shardings(mesh)
-        sdb = rt.ShardedDB(*(jax.device_put(getattr(sdb, f), getattr(sh, f))
-                             for f in ("vectors", "local_ids", "part_adj")))
-        ids, dists = searcher(sdb, jnp.asarray(qr), jnp.asarray(entries))
-    rec = recall_at_k(np.asarray(ids), db.gt, 10)
-    print(f"sharded search recall@10 = {rec:.4f} over {len(qr)} queries")
+    run = idx.searcher("sharded", SearchParams(ef=48, k=10, use_dfloat=False),
+                       mesh=mesh)
+    res = run(db.queries)
+    print(f"sharded search recall@10 = {res.recall(db.gt, 10):.4f} "
+          f"over {len(db.queries)} queries")
     print("per-hop wire traffic: ef x shards x 8B (ids+dists) — vector payloads "
           "never cross shards (DaM)")
 

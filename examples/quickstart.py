@@ -1,17 +1,16 @@
-"""Quickstart: build a NasZip (VD-Zip) index and search it.
+"""Quickstart: build a NasZip index and search it through the unified API.
 
   PYTHONPATH=src python examples/quickstart.py [--tiny]
 
 Covers the full paper pipeline on a synthetic SIFT-like database:
 PCA rotation -> alpha/beta estimation -> graph index -> Dfloat config search
--> FEE-sPCA beam search -> recall + memory-traffic report.
+-> FEE-sPCA beam search -> recall + memory-traffic report, plus the
+save/load round trip.
 """
 import argparse
-import sys
+import tempfile
 import time
 from pathlib import Path
-
-sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
 
 def main():
@@ -21,29 +20,41 @@ def main():
     ap.add_argument("--ef", type=int, default=64)
     args = ap.parse_args()
 
-    from repro.core import vdzip
     from repro.data.synthetic import make_dataset
+    from repro.index import Index, IndexSpec, SearchParams
 
     name = args.dataset or ("unit" if args.tiny else "sift")
     db = make_dataset(name)
-    print(f"[1/3] dataset {db.name}: {db.n} vectors x {db.dim} dims ({db.metric})")
+    print(f"[1/4] dataset {db.name}: {db.n} vectors x {db.dim} dims ({db.metric})")
 
+    spec = IndexSpec.for_db(db, m=8 if args.tiny else 16,
+                            dfloat_recall_target=0.85 if args.tiny else 0.9,
+                            dfloat_proxy=True)
     t0 = time.perf_counter()
-    idx = vdzip.build(db, m=8 if args.tiny else 16, seg=16,
-                      dfloat_recall_target=0.85 if args.tiny else 0.9,
-                      dfloat_proxy=True, cache_key=name)
-    print(f"[2/3] VD-Zip index built in {time.perf_counter()-t0:.1f}s")
+    idx = Index.build(db, spec, cache_key=name)
+    print(f"[2/4] index built in {time.perf_counter()-t0:.1f}s")
     print(f"      dfloat segments: {[(s.width, s.n_dims) for s in idx.dfloat_cfg.segments]}"
           f" -> {idx.dfloat_cfg.bursts_per_vector()} bursts/vector"
           f" (fp32: {db.dim // 4} bursts)")
-    print(f"      alpha[0:4]={idx.fee_fit['alpha'][:4].round(3)}"
-          f" beta[0:4]={idx.fee_fit['beta'][:4].round(3)}")
+    print(f"      alpha[0:4]={idx.fee.alpha[:4].round(3)}"
+          f" beta[0:4]={idx.fee.beta[:4].round(3)}")
 
-    res = vdzip.evaluate(idx, db, ef=args.ef, k=10, use_fee=True, use_dfloat=True)
-    print(f"[3/3] search ef={args.ef}: recall@10={res['recall']:.4f} "
-          f"hops={res['hops']:.1f} dist-evals={res['dist_evals']:.0f}")
-    print(f"      dims touched per eval: {res['dims_per_eval']:.1f} / {db.dim} "
-          f"({res['dims_per_eval']/db.dim*100:.0f}% — FEE-sPCA early exit)")
+    with tempfile.TemporaryDirectory() as tmp:
+        path = Path(tmp) / "idx.naszip"
+        idx.save(path)
+        idx = Index.load(path)
+        print(f"[3/4] save/load round trip through {path.name} ok")
+
+    # recall on the fast early-terminating while_loop path (no tracing)
+    res = idx.evaluate(db, SearchParams(ef=args.ef, k=10))
+    # FEE statistics need per-hop traces: re-run a small traced batch
+    stats = idx.search(db.queries[:48], SearchParams(ef=args.ef, k=10, trace=True))
+    dims_per_eval = float(stats.dims.sum() / max(1, stats.n_eval.sum()))
+    print(f"[4/4] search ef={args.ef}: recall@10={res['recall']:.4f} "
+          f"hops={float(stats.hops.mean()):.1f} "
+          f"dist-evals={float(stats.n_eval.mean()):.0f}")
+    print(f"      dims touched per eval: {dims_per_eval:.1f} / {db.dim} "
+          f"({dims_per_eval/db.dim*100:.0f}% — FEE-sPCA early exit)")
 
 
 if __name__ == "__main__":

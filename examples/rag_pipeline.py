@@ -8,11 +8,7 @@ become context tokens for a llama-family smoke model; the example reports
 time-to-first-token split into retrieve / prefill / decode, mirroring the
 paper's Fig. 24 axes (retrieval recall vs end-to-end latency).
 """
-import sys
 import time
-from pathlib import Path
-
-sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
 import jax
 import jax.numpy as jnp
@@ -21,16 +17,16 @@ import numpy as np
 
 def main():
     from repro import configs as C
-    from repro.core import vdzip
     from repro.data.synthetic import make_dataset
+    from repro.index import Index, IndexSpec, SearchParams
     from repro.models.registry import get_model
 
     # --- retrieval side (NasZip) ---
     db = make_dataset("unit")          # small corpus for the example
-    idx = vdzip.build(db, m=8, seg=16, dfloat_recall_target=None)
+    idx = Index.build(db, IndexSpec.for_db(db, m=8, dfloat_recall_target=None))
     queries = db.queries[:4]
     t0 = time.perf_counter()
-    out = idx.search(queries, ef=64, k=8, use_fee=True)
+    out = idx.search(queries, SearchParams(ef=64, k=8))
     t_retrieve = time.perf_counter() - t0
     print(f"[retrieve] {len(queries)} queries -> top-8 docs in {t_retrieve*1e3:.0f} ms")
 
@@ -42,7 +38,7 @@ def main():
 
     # context = retrieved doc ids hashed into token space (stand-in for real
     # chunk text); question = random tokens
-    doc_tokens = (np.asarray(out["ids"]) % cfg.vocab).astype(np.int32)   # (B, 8)
+    doc_tokens = (out.ids % cfg.vocab).astype(np.int32)                  # (B, 8)
     question = rng.integers(0, cfg.vocab, (len(queries), 24)).astype(np.int32)
     prompt = np.concatenate([doc_tokens, question], axis=1)
 

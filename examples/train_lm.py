@@ -7,10 +7,6 @@ This drives repro.launch.train with a scaled llama config (the example
 deliverable: an end-to-end training driver on the public API).
 """
 import argparse
-import sys
-from pathlib import Path
-
-sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
 
 def main():

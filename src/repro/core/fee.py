@@ -16,12 +16,55 @@ the same contract with block-level DMA skipping.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 BIG = jnp.float32(3.0e38)
+
+
+@dataclasses.dataclass
+class FeeParams:
+    """Typed FEE-sPCA estimation parameters (one entry per segment).
+
+    Registered as a JAX pytree so it can be closed over, passed through jit /
+    vmap / shard_map, and donated like any other array bundle.  Static config
+    (seg width, metric) deliberately lives in ``SearchConfig`` / ``IndexSpec``,
+    not here — this is pure device data.
+    """
+
+    alpha: jnp.ndarray   # (S,) energy ratios, Eq. 3
+    beta: jnp.ndarray    # (S,) Chebyshev correction, >= 1 (l2)
+    margin: jnp.ndarray  # (S,) additive margin (ip); zeros for l2
+
+    @property
+    def n_seg(self) -> int:
+        return self.alpha.shape[0]
+
+    @classmethod
+    def identity(cls, n_seg: int) -> "FeeParams":
+        """alpha=beta=1, margin=0: plain d_part early exit (no estimation)."""
+        return cls(alpha=jnp.ones(n_seg, jnp.float32),
+                   beta=jnp.ones(n_seg, jnp.float32),
+                   margin=jnp.zeros(n_seg, jnp.float32))
+
+    @classmethod
+    def coerce(cls, obj) -> "FeeParams | None":
+        """Accept FeeParams, a legacy alpha/beta/margin dict, or None."""
+        if obj is None or isinstance(obj, cls):
+            return obj
+        return cls(alpha=jnp.asarray(obj["alpha"]),
+                   beta=jnp.asarray(obj["beta"]),
+                   margin=jnp.asarray(obj["margin"]))
+
+    def as_dict(self) -> dict:
+        return dict(alpha=self.alpha, beta=self.beta, margin=self.margin)
+
+
+jax.tree_util.register_dataclass(
+    FeeParams, data_fields=["alpha", "beta", "margin"], meta_fields=[])
 
 
 @partial(jax.jit, static_argnames=("seg", "metric"))
@@ -60,12 +103,10 @@ def exact_distance(q, x, *, metric: str = "l2"):
     return -(x @ q)
 
 
-def make_fee_params(spca, beta_fit: dict):
-    """Bundle device arrays for the online searcher."""
-    return dict(
-        alpha=jnp.asarray(beta_fit["alpha"]),
-        beta=jnp.asarray(beta_fit["beta"]),
-        margin=jnp.asarray(beta_fit["margin"]),
-        seg=int(beta_fit["seg"]),
-        metric=beta_fit["metric"],
-    )
+def make_fee_params(spca, beta_fit: dict):  # pragma: no cover — shim
+    """Deprecated: use :class:`FeeParams` (``FeeParams.coerce(beta_fit)``)."""
+    import warnings
+
+    warnings.warn("make_fee_params is deprecated; use fee.FeeParams.coerce",
+                  DeprecationWarning, stacklevel=2)
+    return FeeParams.coerce(beta_fit)

@@ -15,6 +15,7 @@ inserted — this is exactly the recall/compute trade the paper's beta corrects.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 
 import jax
@@ -22,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fee as fee_mod
+from repro.core.fee import FeeParams
 
 BIG = jnp.float32(3.0e38)
 
@@ -47,7 +49,7 @@ def _dedup_mask(ids):
     return ~earlier
 
 
-def _hop_body(state, vectors, adj, q, fee_params, cfg: SearchConfig):
+def _hop_body(state, vectors, adj, q, fee: FeeParams | None, cfg: SearchConfig):
     beam_ids, beam_d, expanded, visited = state
     ef = beam_ids.shape[0]
     active = (~expanded) & (beam_d < BIG)
@@ -69,8 +71,8 @@ def _hop_body(state, vectors, adj, q, fee_params, cfg: SearchConfig):
     tgt = vectors[safe]                                    # (M, D) gather
     if cfg.use_fee:
         score, rejected, segs_used = fee_mod.fee_distance(
-            q, tgt, threshold, fee_params["alpha"], fee_params["beta"],
-            fee_params["margin"], seg=cfg.seg, metric=cfg.metric)
+            q, tgt, threshold, fee.alpha, fee.beta, fee.margin,
+            seg=cfg.seg, metric=cfg.metric)
     else:
         score = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
         rejected = jnp.zeros_like(valid)
@@ -106,17 +108,26 @@ def _init_state(q, entry, vectors, cfg: SearchConfig, n_words):
     return beam_ids, beam_d, expanded, visited
 
 
-def make_searcher(vectors, adj, cfg: SearchConfig, fee_params=None, trace: bool = False):
+def make_searcher(vectors, adj, cfg: SearchConfig, fee: FeeParams | dict | None = None,
+                  trace: bool = False, *, fee_params=None):
     """Returns search(queries (Q,D), entries (Q,)) -> dict of results.
 
     vectors/adj may be numpy; they are closed over as jnp constants.
+    ``fee`` takes a typed :class:`FeeParams`; legacy alpha/beta/margin dicts
+    are coerced (``fee_params=`` is a deprecated alias for that case).
     """
+    if fee_params is not None:
+        warnings.warn("make_searcher(fee_params=dict) is deprecated; pass "
+                      "fee=FeeParams(...)", DeprecationWarning, stacklevel=2)
+        fee = fee_params
     vectors = jnp.asarray(vectors)
     adj = jnp.asarray(adj, jnp.int32)
     n = vectors.shape[0]
     n_words = -(-n // 32)
-    fee_params = fee_params or {}
-    fp = {k: jnp.asarray(v) for k, v in fee_params.items() if k in ("alpha", "beta", "margin")}
+    fp = FeeParams.coerce(fee)
+    if cfg.use_fee and fp is None:
+        raise ValueError("cfg.use_fee=True requires fee=FeeParams(...) "
+                         "(use FeeParams.identity(n_seg) for plain d_part exit)")
 
     def search_one(q, entry):
         state = _init_state(q, entry, vectors, cfg, n_words)
@@ -146,42 +157,64 @@ def make_searcher(vectors, adj, cfg: SearchConfig, fee_params=None, trace: bool 
     return jax.jit(jax.vmap(search_one))
 
 
+@partial(jax.jit, static_argnames=("metric",))
+def _greedy_level(vecs_l, adj_l, queries, cur, *, metric: str):
+    """One upper-layer greedy descent for a whole query batch.
+
+    A top-level jitted function (arrays are *arguments*, not closure
+    constants), so XLA caches one executable per (level shape, metric) and
+    repeated query batches never recompile.
+    """
+
+    def greedy(q, c):
+        def cond(s):
+            return s[2]
+
+        def body(s):
+            c, d, _ = s
+            nb = adj_l[c]
+            nd = fee_mod.exact_distance(q, vecs_l[nb], metric=metric)
+            j = jnp.argmin(nd)
+            better = nd[j] < d
+            return (jnp.where(better, nb[j], c), jnp.minimum(nd[j], d), better)
+
+        d0 = fee_mod.exact_distance(q, vecs_l[c][None], metric=metric)[0]
+        c, _, _ = jax.lax.while_loop(cond, body, (c, d0, jnp.bool_(True)))
+        return c
+
+    return jax.vmap(greedy)(queries, cur)
+
+
 def descend_entry(vectors, graph, queries, metric: str) -> np.ndarray:
     """Greedy top-down routing through HNSW upper layers -> base entry ids."""
     entries = np.full(len(queries), graph.entry, np.int64)
+    queries = jnp.asarray(queries)
     for ids, adj in reversed(graph.levels[1:]):
-        vecs_l = jnp.asarray(vectors[ids])
-        adj_l = jnp.asarray(adj, jnp.int32)
-        pos = {int(g): i for i, g in enumerate(ids)}
-        cur = np.array([pos.get(int(e), 0) for e in entries], np.int32)
-
-        @jax.jit
-        def greedy(q, c):
-            def cond(s):
-                c, d, moved = s
-                return moved
-            def body(s):
-                c, d, _ = s
-                nb = adj_l[c]
-                nd = fee_mod.exact_distance(q, vecs_l[nb], metric=metric)
-                j = jnp.argmin(nd)
-                better = nd[j] < d
-                return (jnp.where(better, nb[j], c), jnp.minimum(nd[j], d), better)
-            d0 = fee_mod.exact_distance(q, vecs_l[c][None], metric=metric)[0]
-            c, _, _ = jax.lax.while_loop(cond, body, (c, d0, jnp.bool_(True)))
-            return c
-
-        cur = np.asarray(jax.vmap(greedy)(jnp.asarray(queries), jnp.asarray(cur)))
+        # level ids are sorted by construction (graph.build_graph)
+        pos = np.clip(np.searchsorted(ids, entries), 0, len(ids) - 1)
+        cur = np.where(ids[pos] == entries, pos, 0).astype(np.int32)
+        cur = np.asarray(_greedy_level(jnp.asarray(vectors[ids]),
+                                       jnp.asarray(adj, jnp.int32),
+                                       queries, jnp.asarray(cur), metric=metric))
         entries = ids[cur]
     return entries.astype(np.int32)
 
 
-def run_search(vecdb_vectors, graph, queries, cfg: SearchConfig,
-               fee_params=None, trace: bool = False):
-    """Convenience wrapper: descend to base entries, run base-layer search."""
-    entries = descend_entry(vecdb_vectors, graph, queries, cfg.metric)
-    searcher = make_searcher(vecdb_vectors, graph.base_adjacency, cfg,
-                             fee_params=fee_params, trace=trace)
+def search_graph(vectors, graph, queries, cfg: SearchConfig,
+                 fee: FeeParams | dict | None = None, trace: bool = False) -> dict:
+    """Descend to base entries, run base-layer search; numpy result dict."""
+    entries = descend_entry(vectors, graph, queries, cfg.metric)
+    searcher = make_searcher(vectors, graph.base_adjacency, cfg,
+                             fee=fee, trace=trace)
     out = searcher(jnp.asarray(queries), jnp.asarray(entries))
     return {k: np.asarray(v) if not isinstance(v, dict) else {kk: np.asarray(vv) for kk, vv in v.items()}
             for k, v in out.items()}
+
+
+def run_search(vecdb_vectors, graph, queries, cfg: SearchConfig,
+               fee_params=None, trace: bool = False):
+    """Deprecated alias for :func:`search_graph`; prefer ``repro.index``."""
+    warnings.warn("run_search is deprecated; use search_graph or the "
+                  "repro.index Index API", DeprecationWarning, stacklevel=2)
+    return search_graph(vecdb_vectors, graph, queries, cfg,
+                        fee=fee_params, trace=trace)

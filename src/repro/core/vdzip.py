@@ -1,39 +1,72 @@
-"""VD-Zip — the paper's software contribution as one composable pipeline.
+"""Deprecated VD-Zip surface — kept importable for one release.
 
-Offline (Fig. 6 upper):  PCA-rotate DB -> alpha from eigenvalues -> Var_k from
-sampled (query, vector) pairs -> beta from the Chebyshev budget -> Dfloat
-config search (Alg. 1) -> bit-packed DB + graph index.
+The offline pipeline and the search entry points moved to ``repro.index``:
 
-Online (Fig. 6 lower):  hierarchy descent -> FEE-sPCA beam search over the
-(emulated-)quantized vectors.
+    vdzip.build(db, m=..., seg=...)   ->  Index.build(db, IndexSpec(...))
+    VDZipIndex.search(...)            ->  Index.search / Index.searcher(...)
+    vdzip.evaluate(index, db, ...)    ->  Index.evaluate(db, ...)
+
+``vdzip.evaluate`` historically defaulted ``trace=True``, silently forcing the
+fixed-budget ``lax.scan`` path (4*ef hops) even for recall-only callers; the
+shim makes tracing opt-in, matching ``Index.evaluate``.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 
 import numpy as np
 
 from repro.core import dfloat as dfl
-from repro.core import fee as fee_mod
 from repro.core import graph as graph_mod
 from repro.core import pca as pca_mod
 from repro.core import search as search_mod
-from repro.data.synthetic import VecDB, exact_topk, recall_at_k
+from repro.data.synthetic import VecDB, recall_at_k
+
+
+def _deprecated(what: str, use: str):
+    warnings.warn(f"repro.core.vdzip.{what} is deprecated; use {use}",
+                  DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
 class VDZipIndex:
+    """Legacy view of a built index (field-compatible with the seed API)."""
+
     spca: pca_mod.SPCA
     fee_fit: dict                 # alpha/beta/margin/var_k (per FEE segment)
     dfloat_cfg: dfl.DfloatConfig
     graph: graph_mod.GraphIndex
-    db_rot: np.ndarray            # PCA-rotated DB (f32, pre-quantization)
-    db_q: np.ndarray              # Dfloat-emulated rotated DB (what HW sees)
-    db_packed: np.ndarray         # real bitstream (uint32)
+    db_rot: np.ndarray
+    db_q: np.ndarray
+    db_packed: np.ndarray
     metric: str
     seg: int
     timings: dict
+    _index: object = dataclasses.field(default=None, repr=False, compare=False)
+
+    @classmethod
+    def from_index(cls, idx) -> "VDZipIndex":
+        return cls(spca=idx.spca, fee_fit=idx.fee.to_dict(),
+                   dfloat_cfg=idx.dfloat_cfg, graph=idx.graph,
+                   db_rot=idx.db_rot, db_q=idx.db_q, db_packed=idx.db_packed,
+                   metric=idx.metric, seg=idx.seg, timings=idx.timings,
+                   _index=idx)
+
+    def to_index(self):
+        if self._index is not None:
+            return self._index  # shim-built: the real Index, full spec intact
+        from repro.index import FeeFit, Index, IndexSpec
+
+        # hand-assembled legacy index: recover what the fit recorded; build
+        # knobs that left no artifact (prune, seed, ...) fall back to defaults
+        return Index(spec=IndexSpec(metric=self.metric, seg=self.seg,
+                                    m=self.graph.m,
+                                    p_target=float(self.fee_fit["p_target"])),
+                     spca=self.spca, fee=FeeFit.from_dict(self.fee_fit),
+                     dfloat_cfg=self.dfloat_cfg, graph=self.graph,
+                     db_rot=self.db_rot, db_q=self.db_q,
+                     db_packed=self.db_packed, timings=self.timings)
 
     def search_cfg(self, ef=64, k=10, use_fee=True) -> search_mod.SearchConfig:
         return search_mod.SearchConfig(ef=ef, k=k, metric=self.metric,
@@ -47,72 +80,33 @@ class VDZipIndex:
         qr = self.transform_queries(queries)
         db = self.db_q if use_dfloat else self.db_rot
         cfg = self.search_cfg(ef=ef, k=k, use_fee=use_fee)
-        return search_mod.run_search(db, self.graph, qr, cfg,
-                                     fee_params=self.fee_fit, trace=trace)
+        from repro.core.fee import FeeParams
+
+        return search_mod.search_graph(db, self.graph, qr, cfg,
+                                       fee=FeeParams.coerce(self.fee_fit),
+                                       trace=trace)
 
 
 def build(db: VecDB, *, m: int = 16, seg: int = 16, p_target: float = 0.9,
           dfloat_recall_target: float | None = 0.9, recall_k: int = 10,
           ef_fit: int = 64, seed: int = 0, cache_key: str | None = None,
           prune: bool = True, dfloat_proxy: bool = False) -> VDZipIndex:
-    t = {}
-    x = db.vectors
-    d = x.shape[1]
-    assert d % seg == 0, (d, seg)
+    """Deprecated: use ``Index.build(db, IndexSpec(...))``."""
+    _deprecated("build", "repro.index.Index.build")
+    from repro.index import Index, IndexSpec
 
-    t0 = time.perf_counter()
-    spca = pca_mod.fit_spca(x, db.metric)
-    db_rot = spca.transform(x)
-    tq_rot = spca.transform(db.train_queries)
-    t["pca_offline_s"] = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    fee_fit = pca_mod.fit_beta(db_rot, tq_rot, spca.eigvals, seg,
-                               metric=db.metric, p_target=p_target, seed=seed)
-    t["beta_fit_s"] = time.perf_counter() - t0
-
-    # graph built on the rotated DB (distances identical to original space)
-    t0 = time.perf_counter()
-    key = cache_key or f"{db.name}/n{db.n}"
-    graph = graph_mod.build_graph(db_rot, m=m, metric=db.metric, prune=prune,
-                                  cache_key=key, seed=seed)
-    t["graph_build_s"] = time.perf_counter() - t0
-
-    # Dfloat search (Alg. 1) with a recall proxy on sampled train queries
-    t0 = time.perf_counter()
-    if dfloat_recall_target is not None:
-        sample_q = tq_rot[: min(64, len(tq_rot))]
-        gt = exact_topk(db_rot, sample_q, recall_k, db.metric)
-
-        if dfloat_proxy:
-            # fast inner-loop proxy (our speed adaptation of the paper's
-            # mask-emulation evaluation): top-k ordering agreement under
-            # exact quantized distances — no graph traversal per config
-            def recall_fn(db_emul):
-                found = exact_topk(db_emul, sample_q, recall_k, db.metric)
-                return recall_at_k(found, gt, recall_k)
-        else:
-            def recall_fn(db_emul):
-                cfg = search_mod.SearchConfig(ef=ef_fit, k=recall_k, metric=db.metric,
-                                              seg=seg, use_fee=True)
-                out = search_mod.run_search(db_emul, graph, sample_q, cfg,
-                                            fee_params=fee_fit)
-                return recall_at_k(out["ids"], gt, recall_k)
-
-        dfloat_cfg, _log = dfl.search_config(db_rot, recall_fn, dfloat_recall_target)
-    else:
-        dfloat_cfg = dfl.fp32_config(d)
-    db_q = dfl.emulate_db(db_rot, dfloat_cfg)
-    db_packed = dfl.pack_db(db_rot, dfloat_cfg)
-    t["dfloat_search_s"] = time.perf_counter() - t0
-
-    return VDZipIndex(spca=spca, fee_fit=fee_fit, dfloat_cfg=dfloat_cfg,
-                      graph=graph, db_rot=db_rot, db_q=db_q,
-                      db_packed=db_packed, metric=db.metric, seg=seg, timings=t)
+    spec = IndexSpec(metric=db.metric, seg=seg, m=m, p_target=p_target,
+                     dfloat_recall_target=dfloat_recall_target,
+                     recall_k=recall_k, ef_fit=ef_fit, seed=seed, prune=prune,
+                     dfloat_proxy=dfloat_proxy)
+    return VDZipIndex.from_index(Index.build(db, spec, cache_key=cache_key))
 
 
 def evaluate(index: VDZipIndex, db: VecDB, ef=64, k=10, use_fee=True,
-             use_dfloat=True, trace=True) -> dict:
+             use_dfloat=True, trace=False) -> dict:
+    """Deprecated: use ``Index.evaluate``.  ``trace`` is now opt-in (the old
+    ``trace=True`` default forced the 4*ef-hop lax.scan path on every call)."""
+    _deprecated("evaluate", "repro.index.Index.evaluate")
     out = index.search(db.queries, ef=ef, k=k, use_fee=use_fee,
                        use_dfloat=use_dfloat, trace=trace)
     rec = recall_at_k(out["ids"], db.gt, k)

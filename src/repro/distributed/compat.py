@@ -1,0 +1,37 @@
+"""Version compatibility for the mesh / shard_map surface.
+
+The codebase targets the modern ``jax.shard_map`` / ``jax.set_mesh`` API but
+must also run on jax 0.4.x, where shard_map lives in ``jax.experimental``
+(with ``check_rep`` instead of ``check_vma``) and there is no ambient-mesh
+setter (entering the ``Mesh`` object is the legacy equivalent).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    # default False (unlike modern jax): on 0.4.x the check_rep pass is
+    # pathologically slow for our psum/all_gather loops (minutes-long trace
+    # for programs that otherwise run in seconds) — opt in explicitly on
+    # versions where the VMA checker is usable.
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient for jit/device_put defaults."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # legacy: Mesh is itself the context manager

@@ -21,6 +21,7 @@ negligible false-visit rate at billion scale) so the state is O(1) in DB size.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 
 import jax
@@ -29,7 +30,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import fee as fee_mod
+from repro.core.fee import FeeParams
 from repro.core.search import SearchConfig, _dedup_mask
+from repro.distributed import compat
 
 BIG = jnp.float32(3.0e38)
 
@@ -85,14 +88,22 @@ def db_shardings(mesh: Mesh):
 
 
 def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
-                          fee_params=None, n_bits_log2: int = 23):
+                          fee: FeeParams | dict | None = None,
+                          n_bits_log2: int = 23, *, fee_params=None):
     """Returns search(db: ShardedDB, queries (Q, d), entries (Q,)) — a jit'd
-    shard_map program for ``mesh`` (axes: optional pod, data, model)."""
+    shard_map program for ``mesh`` (axes: optional pod, data, model).
+
+    ``fee`` takes a typed :class:`FeeParams`; ``fee_params=`` dicts are a
+    deprecated alias."""
+    if fee_params is not None:
+        warnings.warn("make_sharded_searcher(fee_params=dict) is deprecated; "
+                      "pass fee=FeeParams(...)", DeprecationWarning, stacklevel=2)
+        fee = fee_params
     model_axis = "model" if "model" in mesh.axis_names else mesh.axis_names[-1]
     data_axes = tuple(n for n in mesh.axis_names if n != model_axis)
-    fee_params = fee_params or {}
-    fp = {k: jnp.asarray(v) for k, v in fee_params.items()
-          if k in ("alpha", "beta", "margin")}
+    fp = FeeParams.coerce(fee)
+    if cfg.use_fee and fp is None:
+        raise ValueError("cfg.use_fee=True requires fee=FeeParams(...)")
     n_bits = min(1 << n_bits_log2, 1 << int(np.ceil(np.log2(max(n_total, 2)))))
     n_words = n_bits // 32
     mask_bits = n_bits - 1
@@ -122,7 +133,7 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
         tgt = vec_loc[jnp.maximum(slots, 0)]                # (Mc, d) local gather
         if cfg.use_fee:
             score, rejected, _segs = fee_mod.fee_distance(
-                q, tgt, threshold, fp["alpha"], fp["beta"], fp["margin"],
+                q, tgt, threshold, fp.alpha, fp.beta, fp.margin,
                 seg=cfg.seg, metric=cfg.metric)
         else:
             score = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
@@ -183,7 +194,7 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
         return ids, dists
 
     dp = data_axes if len(data_axes) > 1 else data_axes[0]
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(model_axis, None, None), P(model_axis, None),
                   P(model_axis, None, None), P(dp, None), P(dp)),

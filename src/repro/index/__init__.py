@@ -1,0 +1,16 @@
+"""Unified naszip Index API — the single public surface for building,
+persisting, and searching indices over the local, sharded, and NDP-sim
+execution backends.
+
+    from repro.index import Index, IndexSpec, SearchParams
+
+    idx = Index.build(db, IndexSpec.for_db(db, m=16))
+    idx.save("idx.naszip");  idx = Index.load("idx.naszip")
+    run = idx.searcher(backend="local", params=SearchParams(ef=64, k=10))
+    result = run(queries)            # SearchResult(ids, dists, ...)
+"""
+from repro.core.fee import FeeParams  # noqa: F401  (re-export: typed pytree)
+from repro.index.backends import BACKENDS  # noqa: F401
+from repro.index.index import Index  # noqa: F401
+from repro.index.types import (  # noqa: F401
+    FeeFit, IndexSpec, SearchParams, SearchResult)

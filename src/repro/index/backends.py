@@ -1,0 +1,148 @@
+"""Pluggable execution backends behind ``Index.searcher(backend=...)``.
+
+Every factory returns ``run(queries) -> SearchResult`` with the same call
+signature; only construction-time options differ:
+
+  local    jit/vmap beam search on this process's default device
+  sharded  shard_map DaM retrieval over a (data, model) mesh (paper Fig. 12)
+  ndpsim   trace-driven DIMM-NDP timing model (paper §VI-A) — runs the local
+           searcher with tracing on, then attaches the SimResult projection
+
+Queries are always *raw* (un-rotated) vectors; each backend applies the
+index's sPCA transform and hierarchy descent itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import graph as gmod
+from repro.core import search as search_mod
+from repro.core.fee import FeeParams
+from repro.index.types import SearchParams, SearchResult
+
+BACKENDS = ("local", "sharded", "ndpsim")
+
+
+def make(index, backend: str, params: SearchParams, **opts):
+    if backend == "local":
+        return local_searcher(index, params, **opts)
+    if backend == "sharded":
+        return sharded_searcher(index, params, **opts)
+    if backend == "ndpsim":
+        return ndpsim_searcher(index, params, **opts)
+    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+
+
+def _base_vectors(index, params: SearchParams) -> np.ndarray:
+    return index.db_q if params.use_dfloat else index.db_rot
+
+
+def _fee(index, params: SearchParams, fee=None) -> FeeParams | None:
+    if not params.use_fee:
+        return None
+    return FeeParams.coerce(fee) if fee is not None else index.fee.params
+
+
+def local_searcher(index, params: SearchParams, *, fee=None):
+    """jit/vmap single-host searcher; the jitted executable is built once and
+    reused across query batches.  The DB/adjacency device arrays come from the
+    index-level cache, so searchers for different params share one copy."""
+    import jax.numpy as jnp
+
+    vectors = _base_vectors(index, params)
+    cfg = params.to_config(index.metric, index.seg)
+    searcher = search_mod.make_searcher(index.device_db(params.use_dfloat),
+                                        index.device_adjacency(),
+                                        cfg, fee=_fee(index, params, fee),
+                                        trace=params.trace)
+
+    def run(queries) -> SearchResult:
+        qr = index.transform_queries(np.asarray(queries))
+        entries = search_mod.descend_entry(vectors, index.graph, qr, index.metric)
+        return SearchResult.from_raw(searcher(jnp.asarray(qr),
+                                              jnp.asarray(entries)))
+
+    return run
+
+
+def sharded_searcher(index, params: SearchParams, *, mesh=None,
+                     n_shards: int | None = None, owner_policy: str = "shuffle",
+                     seed: int = 0, n_bits_log2: int = 23, fee=None):
+    """DaM shard_map retrieval (paper Fig. 12): vectors row-sharded over the
+    ``model`` axis, neighbor lists pre-partitioned by owner, queries over
+    ``data``.  With ``mesh=None`` a (1, n_devices) mesh is created."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed import compat
+    from repro.distributed import retrieval as rt
+
+    if params.trace:
+        raise ValueError("sharded backend does not emit traces; use "
+                         "backend='local' (trace=True) or 'ndpsim'")
+    if mesh is None:
+        ndev = len(jax.devices())
+        n_shards = n_shards or ndev
+        if ndev % n_shards:
+            raise ValueError(f"n_shards={n_shards} must divide the available "
+                             f"device count ({ndev}); pass an explicit mesh "
+                             "to use a device subset")
+        mesh = jax.make_mesh((ndev // n_shards, n_shards), ("data", "model"))
+    else:
+        model_axis = "model" if "model" in mesh.axis_names else mesh.axis_names[-1]
+        n_shards = mesh.shape[model_axis]
+
+    vectors = _base_vectors(index, params)
+    owner = gmod.map_owners(index.n, n_shards, owner_policy, seed=seed)
+    dam = gmod.build_dam(index.graph.base_adjacency, owner, n_shards)
+    cfg = params.to_config(index.metric, index.seg)
+    with compat.set_mesh(mesh):
+        searcher = rt.make_sharded_searcher(mesh, cfg, index.n,
+                                            fee=_fee(index, params, fee),
+                                            n_bits_log2=n_bits_log2)
+        sh = rt.db_shardings(mesh)
+        sdb = rt.build_sharded_db(vectors, dam)
+        sdb = rt.ShardedDB(*(jax.device_put(getattr(sdb, f), getattr(sh, f))
+                             for f in ("vectors", "local_ids", "part_adj")))
+
+    def run(queries) -> SearchResult:
+        qr = index.transform_queries(np.asarray(queries))
+        entries = search_mod.descend_entry(vectors, index.graph, qr, index.metric)
+        with compat.set_mesh(mesh):
+            ids, dists = searcher(sdb, jnp.asarray(qr), jnp.asarray(entries))
+        return SearchResult(ids=np.asarray(ids), dists=np.asarray(dists))
+
+    return run
+
+
+def ndpsim_searcher(index, params: SearchParams, *, hw=None, flags=None,
+                    owner_policy: str = "shuffle", seed: int = 0, fee=None):
+    """Trace-driven DIMM-NDP projection: local search with tracing forced on,
+    replayed through ``ndpsim.simulate_ndp``; the SimResult rides on
+    ``SearchResult.sim``."""
+    from repro.core.dfloat import fp32_config
+    from repro.ndpsim import SimFlags, simulate_ndp
+
+    if hw is None:
+        from repro.ndpsim.timing import NASZIP_2CH
+
+        hw = NASZIP_2CH
+    flags = flags or SimFlags()
+    traced = dataclasses.replace(params, trace=True)
+    # no custom fee -> go through the index cache so an already-compiled
+    # traced local searcher is reused instead of jitting a duplicate
+    local = (index.searcher("local", traced) if fee is None
+             else local_searcher(index, traced, fee=fee))
+    owner = gmod.map_owners(index.n, hw.n_subchannels, owner_policy, seed=seed)
+    dfloat_cfg = (index.dfloat_cfg if params.use_dfloat
+                  else fp32_config(index.dim))
+
+    def run(queries) -> SearchResult:
+        res = local(queries)
+        res.sim = simulate_ndp(res, owner, index.graph.base_adjacency, hw,
+                               flags, dfloat_cfg, index.seg)
+        return res
+
+    return run

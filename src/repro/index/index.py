@@ -1,0 +1,277 @@
+"""The unified naszip index: one typed build/search/persist surface.
+
+Offline (paper Fig. 6 upper):  PCA-rotate DB -> alpha from eigenvalues ->
+Var_k from sampled (query, vector) pairs -> beta from the Chebyshev budget ->
+Dfloat config search (Alg. 1) -> bit-packed DB + graph index.
+
+Online (Fig. 6 lower):  hierarchy descent -> FEE-sPCA beam search, executed by
+any of the pluggable backends (``local`` jit/vmap, ``sharded`` shard_map DaM,
+``ndpsim`` timing model) behind one ``searcher(backend=...)`` call.
+
+Persistence: ``Index.save(path)`` writes ``<path>/spec.json`` (build spec +
+Dfloat layout + graph metadata) and ``<path>/arrays.npz`` (rotation, fee fit,
+graph levels, rotated/quantized/packed DB); ``Index.load(path)`` restores a
+bit-identical index.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import dfloat as dfl
+from repro.core import graph as graph_mod
+from repro.core import pca as pca_mod
+from repro.core import search as search_mod
+from repro.data.synthetic import VecDB, exact_topk, recall_at_k
+from repro.index import backends as backends_mod
+from repro.index.types import FeeFit, IndexSpec, SearchParams, SearchResult
+
+FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass
+class Index:
+    """A built naszip index: spec + all offline artifacts."""
+
+    spec: IndexSpec
+    spca: pca_mod.SPCA
+    fee: FeeFit
+    dfloat_cfg: dfl.DfloatConfig
+    graph: graph_mod.GraphIndex
+    db_rot: np.ndarray            # PCA-rotated DB (f32, pre-quantization)
+    db_q: np.ndarray              # Dfloat-emulated rotated DB (what HW sees)
+    db_packed: np.ndarray         # real bitstream (uint32)
+    timings: dict = dataclasses.field(default_factory=dict)
+    _searchers: dict = dataclasses.field(default_factory=dict, repr=False,
+                                         compare=False)
+    _device: dict = dataclasses.field(default_factory=dict, repr=False,
+                                      compare=False)
+
+    MAX_CACHED_SEARCHERS = 16
+
+    # -- trivia -------------------------------------------------------------
+    @property
+    def metric(self) -> str:
+        return self.spec.metric
+
+    @property
+    def seg(self) -> int:
+        return self.spec.seg
+
+    @property
+    def n(self) -> int:
+        return self.db_rot.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.db_rot.shape[1]
+
+    def transform_queries(self, q: np.ndarray) -> np.ndarray:
+        return self.spca.transform(q)
+
+    def device_db(self, use_dfloat: bool = True):
+        """Device copy of the (quantized) DB, shared by every cached searcher
+        so repeated ``searcher()`` calls don't re-upload the vectors."""
+        import jax.numpy as jnp
+
+        key = ("db", bool(use_dfloat))
+        if key not in self._device:
+            self._device[key] = jnp.asarray(self.db_q if use_dfloat
+                                            else self.db_rot)
+        return self._device[key]
+
+    def device_adjacency(self):
+        import jax.numpy as jnp
+
+        if "adj" not in self._device:
+            self._device["adj"] = jnp.asarray(self.graph.base_adjacency,
+                                              jnp.int32)
+        return self._device["adj"]
+
+    # -- build --------------------------------------------------------------
+    @classmethod
+    def build(cls, db: VecDB, spec: IndexSpec | None = None, *,
+              cache_key: str | None = None, **overrides) -> "Index":
+        """Run the full offline pipeline for ``db`` under ``spec``.
+
+        ``overrides`` are IndexSpec field overrides applied on top of ``spec``
+        (or of ``IndexSpec.for_db(db)`` when no spec is given).
+        """
+        if spec is None:
+            spec = IndexSpec.for_db(db, **overrides)
+        elif overrides:
+            spec = dataclasses.replace(spec, **overrides)
+        if spec.metric != db.metric:
+            raise ValueError(f"spec.metric={spec.metric!r} but db is {db.metric!r}")
+        x = db.vectors
+        d = x.shape[1]
+        if d % spec.seg:
+            raise ValueError(f"seg={spec.seg} must divide dim={d}")
+        t = {}
+
+        t0 = time.perf_counter()
+        spca = pca_mod.fit_spca(x, spec.metric)
+        db_rot = spca.transform(x)
+        tq_rot = spca.transform(db.train_queries)
+        t["pca_offline_s"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        fee = FeeFit.from_dict(pca_mod.fit_beta(
+            db_rot, tq_rot, spca.eigvals, spec.seg, metric=spec.metric,
+            p_target=spec.p_target, seed=spec.seed))
+        t["beta_fit_s"] = time.perf_counter() - t0
+
+        # graph built on the rotated DB (distances identical to original space)
+        t0 = time.perf_counter()
+        key = cache_key or f"{db.name}/n{db.n}"
+        graph = graph_mod.build_graph(db_rot, m=spec.m, metric=spec.metric,
+                                      prune=spec.prune, cache_key=key,
+                                      seed=spec.seed)
+        t["graph_build_s"] = time.perf_counter() - t0
+
+        # Dfloat search (Alg. 1) with a recall proxy on sampled train queries
+        t0 = time.perf_counter()
+        if spec.dfloat_recall_target is not None:
+            sample_q = tq_rot[: min(64, len(tq_rot))]
+            gt = exact_topk(db_rot, sample_q, spec.recall_k, spec.metric)
+
+            if spec.dfloat_proxy:
+                # fast inner-loop proxy (our speed adaptation of the paper's
+                # mask-emulation evaluation): top-k ordering agreement under
+                # exact quantized distances — no graph traversal per config
+                def recall_fn(db_emul):
+                    found = exact_topk(db_emul, sample_q, spec.recall_k, spec.metric)
+                    return recall_at_k(found, gt, spec.recall_k)
+            else:
+                def recall_fn(db_emul):
+                    cfg = search_mod.SearchConfig(
+                        ef=spec.ef_fit, k=spec.recall_k, metric=spec.metric,
+                        seg=spec.seg, use_fee=True)
+                    out = search_mod.search_graph(db_emul, graph, sample_q, cfg,
+                                                  fee=fee.params)
+                    return recall_at_k(out["ids"], gt, spec.recall_k)
+
+            dfloat_cfg, _log = dfl.search_config(db_rot, recall_fn,
+                                                 spec.dfloat_recall_target)
+        else:
+            dfloat_cfg = dfl.fp32_config(d)
+        db_q = dfl.emulate_db(db_rot, dfloat_cfg)
+        db_packed = dfl.pack_db(db_rot, dfloat_cfg)
+        t["dfloat_search_s"] = time.perf_counter() - t0
+
+        return cls(spec=spec, spca=spca, fee=fee, dfloat_cfg=dfloat_cfg,
+                   graph=graph, db_rot=db_rot, db_q=db_q, db_packed=db_packed,
+                   timings=t)
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str | Path) -> Path:
+        """Write ``<path>/spec.json`` + ``<path>/arrays.npz``."""
+        path = Path(path)
+        path.mkdir(parents=True, exist_ok=True)
+        meta = dict(
+            format_version=FORMAT_VERSION,
+            spec=dataclasses.asdict(self.spec),
+            fee=dict(seg=self.fee.seg, p_target=self.fee.p_target,
+                     metric=self.fee.metric),
+            dfloat=dict(
+                burst_bits=self.dfloat_cfg.burst_bits,
+                devices_per_subchannel=self.dfloat_cfg.devices_per_subchannel,
+                segments=[dataclasses.asdict(s) for s in self.dfloat_cfg.segments],
+            ),
+            graph=dict(m=self.graph.m, entry=self.graph.entry,
+                       n_levels=len(self.graph.levels)),
+            timings=self.timings,
+        )
+        (path / "spec.json").write_text(json.dumps(meta, indent=1))
+        arrays = dict(
+            spca_mean=self.spca.mean, spca_components=self.spca.components,
+            spca_eigvals=self.spca.eigvals,
+            fee_alpha=self.fee.alpha, fee_beta=self.fee.beta,
+            fee_margin=self.fee.margin, fee_var_k=self.fee.var_k,
+            db_rot=self.db_rot, db_q=self.db_q, db_packed=self.db_packed,
+        )
+        for i, (ids, adj) in enumerate(self.graph.levels):
+            arrays[f"g_ids{i}"] = ids
+            arrays[f"g_adj{i}"] = adj
+        np.savez_compressed(path / "arrays.npz", **arrays)
+        return path
+
+    @classmethod
+    def load(cls, path: str | Path) -> "Index":
+        path = Path(path)
+        meta = json.loads((path / "spec.json").read_text())
+        if meta["format_version"] != FORMAT_VERSION:
+            raise ValueError(f"unsupported index format {meta['format_version']}")
+        spec = IndexSpec(**meta["spec"])
+        with np.load(path / "arrays.npz", allow_pickle=False) as z:
+            a = {k: z[k] for k in z.files}
+        spca = pca_mod.SPCA(mean=a["spca_mean"], components=a["spca_components"],
+                            eigvals=a["spca_eigvals"], metric=spec.metric)
+        fee = FeeFit(alpha=a["fee_alpha"], beta=a["fee_beta"],
+                     margin=a["fee_margin"], var_k=a["fee_var_k"],
+                     seg=int(meta["fee"]["seg"]),
+                     p_target=float(meta["fee"]["p_target"]),
+                     metric=str(meta["fee"]["metric"]))
+        dmeta = meta["dfloat"]
+        dfloat_cfg = dfl.DfloatConfig(
+            segments=tuple(dfl.DfloatSegment(**s) for s in dmeta["segments"]),
+            burst_bits=int(dmeta["burst_bits"]),
+            devices_per_subchannel=int(dmeta["devices_per_subchannel"]))
+        levels = [(a[f"g_ids{i}"], a[f"g_adj{i}"])
+                  for i in range(int(meta["graph"]["n_levels"]))]
+        graph = graph_mod.GraphIndex(levels=levels,
+                                     entry=int(meta["graph"]["entry"]),
+                                     m=int(meta["graph"]["m"]))
+        return cls(spec=spec, spca=spca, fee=fee, dfloat_cfg=dfloat_cfg,
+                   graph=graph, db_rot=a["db_rot"], db_q=a["db_q"],
+                   db_packed=a["db_packed"], timings=meta.get("timings", {}))
+
+    # -- search -------------------------------------------------------------
+    def searcher(self, backend: str = "local",
+                 params: SearchParams | None = None, **opts):
+        """Return ``run(queries) -> SearchResult`` for the chosen backend.
+
+        Searchers without backend-specific options are cached on the index, so
+        repeated query batches reuse one compiled executable.
+        """
+        params = params or SearchParams()
+        key = (backend, params) if not opts else None
+        if key is not None and key in self._searchers:
+            return self._searchers[key]
+        fn = backends_mod.make(self, backend, params, **opts)
+        if key is not None:
+            while len(self._searchers) >= self.MAX_CACHED_SEARCHERS:
+                self._searchers.pop(next(iter(self._searchers)))
+            self._searchers[key] = fn
+        return fn
+
+    @staticmethod
+    def _params(params: SearchParams | None, kw: dict) -> SearchParams:
+        if params is not None and kw:
+            raise TypeError(f"pass either params= or field overrides, not both: {kw}")
+        return params or SearchParams(**kw)
+
+    def search(self, queries: np.ndarray, params: SearchParams | None = None,
+               **kw) -> SearchResult:
+        """Local-backend convenience: ``search(q, ef=64, k=10, trace=True)``."""
+        return self.searcher("local", self._params(params, kw))(queries)
+
+    def evaluate(self, db: VecDB, params: SearchParams | None = None,
+                 **kw) -> dict:
+        """Recall (and, when tracing, hop/eval/dims statistics) on db.queries."""
+        params = self._params(params, kw)
+        res = self.search(db.queries, params)
+        out = dict(recall=recall_at_k(res.ids, db.gt, params.k),
+                   ef=params.ef, k=params.k)
+        if params.trace:
+            out.update(
+                hops=float(np.mean(res.hops)),
+                dist_evals=float(np.mean(res.n_eval)),
+                dims_per_eval=float(res.dims.sum() / max(1, res.n_eval.sum())),
+                dims_total=float(np.mean(res.dims)),
+            )
+        return out

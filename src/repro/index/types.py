@@ -1,0 +1,146 @@
+"""Typed public surface of the unified naszip Index API.
+
+One frozen :class:`IndexSpec` describes how an index is built (metric, FEE
+segment width, graph degree, Dfloat policy, FEE/p_target policy); one frozen
+:class:`SearchParams` describes how it is queried; every backend returns a
+:class:`SearchResult`.  :class:`FeeFit` is the host-side record of the
+alpha/beta fit — its device view is ``repro.core.fee.FeeParams`` (a JAX
+pytree).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import numpy as np
+
+from repro.core.fee import FeeParams
+from repro.core.search import SearchConfig
+
+
+def _auto_seg(dim: int) -> int:
+    """Largest FEE segment width <= 16 that divides ``dim`` (16 preferred)."""
+    if dim % 16 == 0:
+        return 16
+    return max(s for s in range(1, 17) if dim % s == 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Frozen build recipe: everything ``Index.build`` needs besides the DB."""
+
+    metric: str = "l2"                        # "l2" | "ip"
+    seg: int = 16                             # FEE checkpoint granularity
+    m: int = 16                               # graph degree
+    p_target: float = 0.9                     # FEE Chebyshev budget (Eq. 5/6)
+    dfloat_recall_target: float | None = 0.9  # None -> keep fp32
+    recall_k: int = 10                        # k used by the Dfloat proxy
+    ef_fit: int = 64                          # ef used by the Dfloat recall fn
+    dfloat_proxy: bool = False                # exact-topk proxy vs graph search
+    prune: bool = True                        # RNG/occlusion prune base layer
+    seed: int = 0
+
+    @classmethod
+    def for_db(cls, db, **overrides) -> "IndexSpec":
+        """Spec matched to a VecDB: metric from the DB, seg dividing its dim."""
+        base = dict(metric=db.metric, seg=_auto_seg(db.dim))
+        base.update(overrides)
+        return cls(**base)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @classmethod
+    def from_json(cls, s: str) -> "IndexSpec":
+        return cls(**json.loads(s))
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Query-time knobs, shared verbatim by every backend."""
+
+    ef: int = 64
+    k: int = 10
+    use_fee: bool = True
+    use_dfloat: bool = True
+    trace: bool = False        # emit per-hop traces (fixed 4*ef hop budget)
+    max_hops: int = 0          # 0 -> auto (4*ef) when tracing
+
+    def to_config(self, metric: str, seg: int) -> SearchConfig:
+        return SearchConfig(ef=self.ef, k=self.k, metric=metric, seg=seg,
+                            max_hops=self.max_hops, use_fee=self.use_fee)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Uniform result of every backend.
+
+    ``ids``/``dists`` are (Q, k) numpy arrays.  Trace statistics are present
+    only when the search ran with ``SearchParams.trace``; ``sim`` is the
+    timing-model projection attached by the ``ndpsim`` backend.
+    """
+
+    ids: np.ndarray
+    dists: np.ndarray
+    hops: np.ndarray | None = None       # (Q,)
+    n_eval: np.ndarray | None = None     # (Q,)
+    dims: np.ndarray | None = None       # (Q,)
+    trace: dict | None = None            # per-hop arrays (node/nbrs/segs/...)
+    sim: Any = None                      # ndpsim.SimResult (ndpsim backend)
+
+    @classmethod
+    def from_raw(cls, out: dict) -> "SearchResult":
+        """Wrap the raw dict produced by ``core.search``'s jitted searcher."""
+        np_of = lambda v: None if v is None else (
+            {k: np.asarray(x) for k, x in v.items()} if isinstance(v, dict)
+            else np.asarray(v))
+        return cls(ids=np_of(out["ids"]), dists=np_of(out["dists"]),
+                   hops=np_of(out.get("hops")), n_eval=np_of(out.get("n_eval")),
+                   dims=np_of(out.get("dims")), trace=np_of(out.get("trace")))
+
+    def __getitem__(self, key: str):
+        """Dict-style access kept for smooth migration off result dicts."""
+        v = getattr(self, key)
+        if v is None:
+            raise KeyError(f"{key!r} not populated (trace-only field?)")
+        return v
+
+    def recall(self, gt: np.ndarray, k: int | None = None) -> float:
+        from repro.data.synthetic import recall_at_k
+
+        k = k or self.ids.shape[1]
+        return recall_at_k(self.ids, gt, k)
+
+
+@dataclasses.dataclass(frozen=True)
+class FeeFit:
+    """Host-side alpha/beta fit record (what ``pca.fit_beta`` measured)."""
+
+    alpha: np.ndarray
+    beta: np.ndarray
+    margin: np.ndarray
+    var_k: np.ndarray
+    seg: int
+    p_target: float
+    metric: str
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FeeFit":
+        return cls(alpha=np.asarray(d["alpha"], np.float32),
+                   beta=np.asarray(d["beta"], np.float32),
+                   margin=np.asarray(d["margin"], np.float32),
+                   var_k=np.asarray(d["var_k"], np.float32),
+                   seg=int(d["seg"]), p_target=float(d["p_target"]),
+                   metric=str(d["metric"]))
+
+    def to_dict(self) -> dict:
+        return dict(alpha=self.alpha, beta=self.beta, margin=self.margin,
+                    var_k=self.var_k, seg=self.seg, p_target=self.p_target,
+                    metric=self.metric)
+
+    @property
+    def params(self) -> FeeParams:
+        """Device view: the JAX-pytree parameter bundle the searchers close over."""
+        return FeeParams.coerce(dict(alpha=self.alpha, beta=self.beta,
+                                     margin=self.margin))

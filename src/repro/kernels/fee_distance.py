@@ -30,6 +30,14 @@ from jax.experimental.pallas import tpu as pltpu
 BIG = 3.0e38
 
 
+def _compiler_params_cls():
+    for name in ("CompilerParams", "TPUCompilerParams"):  # new / 0.4.x name
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    raise RuntimeError("unsupported jax/pallas version: no TPU CompilerParams")
+
+
 def _kernel(q_ref, x_ref, thr_ref, alpha_ref, beta_ref, margin_ref,
             dist_ref, rej_ref, segs_ref,
             acc, alive, nseg, *, metric: str, n_segs: int, last_valid_seg: int):
@@ -116,7 +124,7 @@ def fee_distance_pallas(q, x, threshold, alpha, beta, margin, *,
             pltpu.VMEM((tile_c, 1), jnp.int32),     # alive
             pltpu.VMEM((tile_c, 1), jnp.int32),     # nseg
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params_cls()(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs as C
+from repro.distributed import compat
 from repro.distributed import sharding as sh
 from repro.launch import mesh as mesh_mod
 from repro.models.registry import get_model
@@ -228,7 +229,7 @@ def build_cell(arch: str, shape_name: str, mesh, variant: str = "memory",
 def build_retrieval_cell(mesh, n: int = 1_000_000_000, d: int = 128,
                          m_part: int = 8, ef: int = 64, batch: int = 1024):
     """The paper's own workload at BigANN-1B scale as a dry-run cell."""
-    import numpy as np
+    from repro.core.fee import FeeParams
     from repro.core.search import SearchConfig
     from repro.distributed import retrieval as rt
 
@@ -236,9 +237,7 @@ def build_retrieval_cell(mesh, n: int = 1_000_000_000, d: int = 128,
     db = rt.abstract_db(n, d, n_shards, m_part, jnp.bfloat16)
     seg = 16
     cfg = SearchConfig(ef=ef, k=10, metric="l2", seg=seg, use_fee=True, max_hops=2 * ef)
-    fee = dict(alpha=np.ones(d // seg, np.float32), beta=np.ones(d // seg, np.float32),
-               margin=np.zeros(d // seg, np.float32))
-    searcher = rt.make_sharded_searcher(mesh, cfg, n, fee_params=fee)
+    searcher = rt.make_sharded_searcher(mesh, cfg, n, fee=FeeParams.identity(d // seg))
     q = jax.ShapeDtypeStruct((batch, d), jnp.float32)
     e = jax.ShapeDtypeStruct((batch,), jnp.int32)
     return searcher, (db, q, e)
@@ -246,7 +245,7 @@ def build_retrieval_cell(mesh, n: int = 1_000_000_000, d: int = 128,
 
 def analyze(jitted, args_abs, mesh, meta: dict) -> dict:
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jitted.lower(*args_abs)
         compiled = lowered.compile()
     t1 = time.time()
@@ -290,7 +289,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, force=False) -> dict:
     try:
         if arch == "retrieval-bigann1b":
             searcher, args_abs = build_retrieval_cell(mesh)
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 lowered = searcher.lower(*args_abs)
                 compiled = lowered.compile()
             mem = compiled.memory_analysis()

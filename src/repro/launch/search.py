@@ -1,8 +1,9 @@
-"""End-to-end NasZip retrieval driver: build VD-Zip index, run the searcher,
-report recall/QPS plus the NDP-model projection.
+"""End-to-end NasZip retrieval driver on the unified Index API: build (or
+load) an index, run any backend, report recall/QPS.
 
   PYTHONPATH=src python -m repro.launch.search --dataset sift --ef 64 \
-      [--no-fee] [--no-dfloat] [--sharded --devices 8]
+      [--backend local|sharded|ndpsim] [--no-fee] [--no-dfloat] \
+      [--devices 8] [--save PATH | --load PATH]
 """
 import argparse
 import os
@@ -17,77 +18,70 @@ def main(argv=None):
     ap.add_argument("--no-fee", action="store_true")
     ap.add_argument("--no-dfloat", action="store_true")
     ap.add_argument("--dfloat-target", type=float, default=0.9)
-    ap.add_argument("--sharded", action="store_true")
+    ap.add_argument("--backend", default="local",
+                    choices=["local", "sharded", "ndpsim"])
+    ap.add_argument("--sharded", action="store_true",
+                    help="deprecated alias for --backend sharded")
+    ap.add_argument("--ndp", action="store_true",
+                    help="deprecated alias: also project DIMM-NDP perf")
     ap.add_argument("--devices", type=int, default=0)
-    ap.add_argument("--ndp", action="store_true", help="project DIMM-NDP perf")
+    ap.add_argument("--save", default=None, help="persist the built index here")
+    ap.add_argument("--load", default=None, help="load instead of building")
     args = ap.parse_args(argv)
+    if args.sharded:
+        args.backend = "sharded"
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
 
     import time
-    import numpy as np
 
-    from repro.core import vdzip
-    from repro.data.synthetic import make_dataset, recall_at_k
+    from repro.data.synthetic import make_dataset
+    from repro.index import Index, IndexSpec, SearchParams
 
     db = make_dataset(args.dataset)
     print(f"dataset {db.name}: {db.n} x {db.dim} ({db.metric})")
-    t0 = time.perf_counter()
-    idx = vdzip.build(db, m=args.m,
-                      seg=16 if db.dim % 16 == 0 else db.dim // 8,
-                      dfloat_recall_target=None if args.no_dfloat else args.dfloat_target)
-    print(f"index built in {time.perf_counter()-t0:.1f}s  timings={idx.timings}")
+    if args.load:
+        idx = Index.load(args.load)
+        print(f"index loaded from {args.load} (spec={idx.spec})")
+    else:
+        spec = IndexSpec.for_db(
+            db, m=args.m,
+            dfloat_recall_target=None if args.no_dfloat else args.dfloat_target)
+        t0 = time.perf_counter()
+        idx = Index.build(db, spec)
+        print(f"index built in {time.perf_counter()-t0:.1f}s  timings={idx.timings}")
     print(f"dfloat: {[(s.width, s.n_dims) for s in idx.dfloat_cfg.segments]} "
           f"bursts/vec {idx.dfloat_cfg.bursts_per_vector()}")
+    if args.save:
+        print(f"index saved to {idx.save(args.save)}")
 
-    if args.sharded:
+    params = SearchParams(ef=args.ef, k=args.k, use_fee=not args.no_fee,
+                          use_dfloat=not args.no_dfloat)
+
+    if args.backend == "sharded":
         import jax
-        import jax.numpy as jnp
-        from repro.core import graph as gmod
-        from repro.core.search import SearchConfig, descend_entry
-        from repro.distributed import retrieval as rt
 
         ndev = len(jax.devices())
-        mesh = jax.make_mesh((1, ndev), ("data", "model"))
-        owner = gmod.map_owners(db.n, ndev, "shuffle")
-        dam = gmod.build_dam(idx.graph.base_adjacency, owner, ndev)
-        sdb = rt.build_sharded_db(idx.db_q, dam)
-        cfg = SearchConfig(ef=args.ef, k=args.k, metric=db.metric, seg=idx.seg,
-                           use_fee=not args.no_fee)
-        qr = idx.transform_queries(db.queries)
-        entries = descend_entry(idx.db_rot, idx.graph, qr, db.metric)
-        with jax.set_mesh(mesh):
-            searcher = rt.make_sharded_searcher(mesh, cfg, db.n, fee_params=idx.fee_fit)
-            sh = rt.db_shardings(mesh)
-            sdb = rt.ShardedDB(*(jax.device_put(getattr(sdb, f), getattr(sh, f))
-                                 for f in ("vectors", "local_ids", "part_adj")))
-            t0 = time.perf_counter()
-            ids, _ = searcher(sdb, jnp.asarray(qr), jnp.asarray(entries))
-            ids = np.asarray(ids)
-            dt = time.perf_counter() - t0
-        rec = recall_at_k(ids, db.gt, args.k)
-        print(f"[sharded x{ndev}] recall@{args.k}={rec:.4f} "
-              f"wall {dt:.2f}s ({len(qr)/dt:.0f} q/s incl. compile)")
+        run = idx.searcher("sharded", params)
+        t0 = time.perf_counter()
+        res = run(db.queries)
+        dt = time.perf_counter() - t0
+        print(f"[sharded x{ndev}] recall@{args.k}={res.recall(db.gt, args.k):.4f} "
+              f"wall {dt:.2f}s ({len(db.queries)/dt:.0f} q/s incl. compile)")
         return
 
+    traced = SearchParams(ef=args.ef, k=args.k, use_fee=not args.no_fee,
+                          use_dfloat=not args.no_dfloat, trace=True)
     t0 = time.perf_counter()
-    res = vdzip.evaluate(idx, db, ef=args.ef, k=args.k, use_fee=not args.no_fee,
-                         use_dfloat=not args.no_dfloat)
+    res = idx.evaluate(db, traced)
     dt = time.perf_counter() - t0
     print(f"recall@{args.k}={res['recall']:.4f} hops={res['hops']:.1f} "
           f"evals={res['dist_evals']:.0f} dims/eval={res['dims_per_eval']:.1f}/{db.dim}")
     print(f"wall {dt:.2f}s for {len(db.queries)} queries")
 
-    if args.ndp:
-        from repro.core import graph as gmod
-        from repro.ndpsim import SimFlags, simulate_ndp
-        from repro.ndpsim.timing import NASZIP_2CH
-        out = idx.search(db.queries, ef=args.ef, k=args.k,
-                         use_fee=not args.no_fee, trace=True)
-        owner = gmod.map_owners(db.n, NASZIP_2CH.n_subchannels, "shuffle")
-        r = simulate_ndp(out["trace"], owner, idx.graph.base_adjacency,
-                         NASZIP_2CH, SimFlags(), idx.dfloat_cfg, idx.seg)
+    if args.backend == "ndpsim" or args.ndp:
+        r = idx.searcher("ndpsim", params)(db.queries).sim
         print(f"[NDP 2ch] QPS={r.qps:.0f} lat={r.avg_latency_us:.0f}us "
               f"breakdown={ {k: round(v,3) for k,v in r.breakdown().items()} } "
               f"pf={r.prefetch_hit:.2f}")

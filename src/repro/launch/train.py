@@ -59,12 +59,14 @@ def main(argv=None):
     mesh = jax.make_mesh(shape, ("data", "model")[: len(shape)] if len(shape) == 2
                          else ("pod", "data", "model"))
 
+    from repro.distributed import compat
+
     pipe = TokenPipeline(cfg.vocab, args.batch, args.seq, seed=1,
                          frontend=cfg.frontend, frontend_tokens=cfg.frontend_tokens,
                          d_model=cfg.d_model, encdec=cfg.is_encdec,
                          decoder_len=min(cfg.decoder_len_train, args.seq))
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = api.init(jax.random.key(0))
         pspecs = sh.param_specs(api.abstract_params(), mesh)
         params = jax.tree.map(lambda x, s: jax.device_put(x, jax.NamedSharding(mesh, s)),

@@ -30,6 +30,17 @@ from repro.ndpsim.timing import NDPConfig, PlatformConfig
 BIG = 1.0e38
 
 
+def _as_trace(traces) -> dict:
+    """Accept a raw per-hop trace dict, a full search-result dict with a
+    ``trace`` entry, or a typed ``repro.index.SearchResult``."""
+    t = getattr(traces, "trace", traces)
+    if isinstance(t, dict) and "node" not in t and "trace" in t:
+        t = t["trace"]
+    if t is None or "node" not in t:
+        raise ValueError("no per-hop trace — search with SearchParams(trace=True)")
+    return t
+
+
 @dataclasses.dataclass
 class SimFlags:
     dam: bool = True          # data-aware neighbor-list mapping (§V-C2)
@@ -64,9 +75,10 @@ def _list_bytes(n_entries: int) -> int:
     return 4 * max(n_entries, 1)  # 4B per neighbor id (Fig. 12b)
 
 
-def simulate_ndp(traces: dict, owner: np.ndarray, adj: np.ndarray,
+def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
                  hw: NDPConfig, flags: SimFlags, dfloat_cfg: DfloatConfig,
                  seg: int, name: str = "naszip") -> SimResult:
+    traces = _as_trace(traces)
     node = np.asarray(traces["node"])          # (Q, H)
     nbrs = np.asarray(traces["nbrs"])          # (Q, H, M)
     segs = np.asarray(traces["segs"])          # (Q, H, M)
@@ -254,7 +266,7 @@ def simulate_ndp(traces: dict, owner: np.ndarray, adj: np.ndarray,
     )
 
 
-def simulate_platform(traces: dict, dim: int, hw: PlatformConfig,
+def simulate_platform(traces, dim: int, hw: PlatformConfig,
                       bytes_per_feature: float = 4.0, name: str | None = None,
                       extra_hop_ns: float = 0.0) -> SimResult:
     """Roofline model of the same trace on CPU/GPU/ASIC platforms (Fig. 15/16).
@@ -263,6 +275,7 @@ def simulate_platform(traces: dict, dim: int, hw: PlatformConfig,
     ``segs`` says otherwise; SCANN-style quantization is expressed through
     ``bytes_per_feature``.
     """
+    traces = _as_trace(traces)
     node = np.asarray(traces["node"])
     nbrs = np.asarray(traces["nbrs"])
     q_total = node.shape[0]

@@ -21,11 +21,21 @@ def unit_ip_db():
 
 @pytest.fixture(scope="session")
 def unit_index(unit_db):
-    from repro.core import vdzip
-    return vdzip.build(unit_db, m=8, seg=16, dfloat_recall_target=None)
+    from repro.index import Index, IndexSpec
+    return Index.build(unit_db, IndexSpec.for_db(unit_db, m=8,
+                                                 dfloat_recall_target=None))
+
+
+@pytest.fixture(scope="session")
+def unit_ip_index(unit_ip_db):
+    from repro.index import Index, IndexSpec
+    return Index.build(unit_ip_db, IndexSpec.for_db(unit_ip_db, m=8,
+                                                    dfloat_recall_target=None))
 
 
 @pytest.fixture(scope="session")
 def unit_index_dfloat(unit_db):
-    from repro.core import vdzip
-    return vdzip.build(unit_db, m=8, seg=16, dfloat_recall_target=0.80, ef_fit=32)
+    from repro.index import Index, IndexSpec
+    return Index.build(unit_db, IndexSpec.for_db(unit_db, m=8,
+                                                 dfloat_recall_target=0.80,
+                                                 ef_fit=32))

@@ -24,30 +24,18 @@ def _run(code: str, timeout=560):
 def test_sharded_retrieval_matches_single_device():
     out = _run(r"""
 import sys; sys.path.insert(0, "%s")
-import numpy as np, jax, jax.numpy as jnp
-from repro.data.synthetic import make_dataset, recall_at_k
-from repro.core import vdzip, graph as gmod
-from repro.core.search import SearchConfig, run_search, descend_entry
-from repro.distributed import retrieval as rt
+import numpy as np, jax
+from repro.data.synthetic import make_dataset
+from repro.index import Index, IndexSpec, SearchParams
 
 db = make_dataset("unit")
-idx = vdzip.build(db, m=8, seg=16, dfloat_recall_target=None)
+idx = Index.build(db, IndexSpec.for_db(db, m=8, dfloat_recall_target=None))
 mesh = jax.make_mesh((2, 4), ("data", "model"))
-owner = gmod.map_owners(db.n, 4, "shuffle")
-dam = gmod.build_dam(idx.graph.base_adjacency, owner, 4)
-sdb = rt.build_sharded_db(idx.db_rot, dam)
-cfg = SearchConfig(ef=32, k=10, metric=db.metric, seg=16, use_fee=True)
-qr = idx.transform_queries(db.queries[:16])
-entries = descend_entry(idx.db_rot, idx.graph, qr, db.metric)
-with jax.set_mesh(mesh):
-    searcher = rt.make_sharded_searcher(mesh, cfg, db.n, fee_params=idx.fee_fit)
-    sh = rt.db_shardings(mesh)
-    sdb = rt.ShardedDB(*(jax.device_put(getattr(sdb, f), getattr(sh, f))
-                         for f in ("vectors", "local_ids", "part_adj")))
-    ids, _ = searcher(sdb, jnp.asarray(qr), jnp.asarray(entries))
-ref = run_search(idx.db_rot, idx.graph, qr, cfg, fee_params=idx.fee_fit)
+params = SearchParams(ef=32, k=10, use_dfloat=False)
+sharded = idx.searcher("sharded", params, mesh=mesh)(db.queries[:16])
+ref = idx.searcher("local", params)(db.queries[:16])
 overlap = np.mean([len(set(a.tolist()) & set(b.tolist()))/10
-                   for a, b in zip(np.asarray(ids), ref["ids"][:16])])
+                   for a, b in zip(sharded.ids, ref.ids)])
 print("OVERLAP", overlap)
 assert overlap >= 0.99, overlap
 """ % SRC)
@@ -77,7 +65,8 @@ for t in range(4, 8):
 
 # sharded: seq-sharded KV over model axis
 mesh = jax.make_mesh((2, 4), ("data", "model"))
-with jax.set_mesh(mesh):
+from repro.distributed import compat
+with compat.set_mesh(mesh):
     pspecs = sh.param_specs(api.abstract_params(), mesh)
     params_s = jax.tree.map(lambda x, s: jax.device_put(x, jax.NamedSharding(mesh, s)),
                             params, pspecs)
@@ -112,9 +101,10 @@ def body(g):
     deq, err = comp.compressed_psum(grads, err, "data")
     return deq["w"][None], err["w"][None]
 
-with jax.set_mesh(mesh):
-    deq, err = jax.shard_map(body, mesh=mesh, in_specs=(P("data", None),),
-                             out_specs=(P("data", None), P("data", None)))(g_global)
+from repro.distributed import compat
+with compat.set_mesh(mesh):
+    deq, err = compat.shard_map(body, mesh=mesh, in_specs=(P("data", None),),
+                                out_specs=(P("data", None), P("data", None)))(g_global)
 true_mean = np.asarray(g_global).mean(0)
 got = np.asarray(deq)[0]
 rel = np.abs(got - true_mean).max() / (np.abs(true_mean).max() + 1e-9)

@@ -89,7 +89,8 @@ cfg = C.get_smoke("llama3.2-1b")
 api = get_model(cfg)
 ndev = len(jax.devices())
 mesh = jax.make_mesh((1, ndev), ("data", "model"))
-with jax.set_mesh(mesh):
+from repro.distributed import compat
+with compat.set_mesh(mesh):
     pspecs = sh.param_specs(api.abstract_params(), mesh)
     if mode == "save":
         params = api.init(jax.random.key(0))

@@ -1,0 +1,168 @@
+"""Unified Index API: persistence round trip, typed params, backend parity,
+and the legacy deprecation shims."""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fee import FeeParams
+from repro.index import Index, IndexSpec, SearchParams, SearchResult
+
+PARAMS = SearchParams(ef=48, k=10, use_dfloat=False)
+
+
+def _overlap(a: np.ndarray, b: np.ndarray) -> float:
+    return float(np.mean([len(set(x.tolist()) & set(y.tolist())) / a.shape[1]
+                          for x, y in zip(a, b)]))
+
+
+# ---------------------------------------------------------------------------
+# typed params
+# ---------------------------------------------------------------------------
+
+
+def test_fee_params_is_a_pytree(unit_index):
+    fp = unit_index.fee.params
+    leaves, treedef = jax.tree_util.tree_flatten(fp)
+    assert len(leaves) == 3
+    fp2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(np.asarray(fp2.alpha), np.asarray(fp.alpha))
+    # usable through jit like any other array bundle
+    scaled = jax.jit(lambda p: jax.tree.map(lambda x: 2 * x, p))(fp)
+    np.testing.assert_allclose(np.asarray(scaled.beta),
+                               2 * np.asarray(fp.beta), rtol=1e-6)
+
+
+def test_spec_json_round_trip(unit_db):
+    spec = IndexSpec.for_db(unit_db, m=8, dfloat_recall_target=None)
+    assert IndexSpec.from_json(spec.to_json()) == spec
+    with pytest.raises(ValueError):
+        Index.build(unit_db, dataclasses.replace(spec, metric="ip"))
+
+
+def test_search_params_validation(unit_index):
+    with pytest.raises(ValueError):
+        unit_index.searcher("warp-drive")
+    with pytest.raises(ValueError):
+        unit_index.searcher("sharded", SearchParams(trace=True))
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+
+def test_save_load_round_trip(unit_db, unit_index, tmp_path):
+    path = unit_index.save(tmp_path / "idx.naszip")
+    loaded = Index.load(path)
+
+    assert loaded.spec == unit_index.spec
+    assert loaded.dfloat_cfg == unit_index.dfloat_cfg
+    for f in ("alpha", "beta", "margin", "var_k"):
+        np.testing.assert_array_equal(getattr(loaded.fee, f),
+                                      getattr(unit_index.fee, f))
+    np.testing.assert_array_equal(loaded.db_packed, unit_index.db_packed)
+
+    ref = unit_index.search(unit_db.queries, PARAMS)
+    got = loaded.search(unit_db.queries, PARAMS)
+    np.testing.assert_array_equal(got.ids, ref.ids)
+    np.testing.assert_array_equal(got.dists, ref.dists)
+
+
+def test_load_rejects_unknown_format(unit_index, tmp_path):
+    path = unit_index.save(tmp_path / "idx.naszip")
+    spec = path / "spec.json"
+    spec.write_text(spec.read_text().replace('"format_version": 1',
+                                             '"format_version": 99'))
+    with pytest.raises(ValueError):
+        Index.load(path)
+
+
+# ---------------------------------------------------------------------------
+# backend parity (one searcher() call, three substrates)
+# ---------------------------------------------------------------------------
+
+
+def _single_device_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_local_sharded_parity_l2(unit_db, unit_index):
+    ref = unit_index.searcher("local", PARAMS)(unit_db.queries)
+    sh = unit_index.searcher("sharded", PARAMS,
+                             mesh=_single_device_mesh())(unit_db.queries)
+    assert _overlap(sh.ids, ref.ids) >= 0.95
+
+
+def test_local_sharded_parity_ip(unit_ip_db, unit_ip_index):
+    ref = unit_ip_index.searcher("local", PARAMS)(unit_ip_db.queries)
+    sh = unit_ip_index.searcher("sharded", PARAMS,
+                                mesh=_single_device_mesh())(unit_ip_db.queries)
+    assert _overlap(sh.ids, ref.ids) >= 0.95
+
+
+def test_loaded_index_runs_all_backends(unit_db, unit_index, tmp_path):
+    """Acceptance: build -> save -> load -> one searcher(backend=...) call per
+    substrate, identical ids on the local round trip."""
+    loaded = Index.load(unit_index.save(tmp_path / "idx.naszip"))
+    ref = unit_index.search(unit_db.queries[:16], PARAMS)
+
+    local = loaded.searcher("local", PARAMS)(unit_db.queries[:16])
+    np.testing.assert_array_equal(local.ids, ref.ids)
+
+    sharded = loaded.searcher("sharded", PARAMS,
+                              mesh=_single_device_mesh())(unit_db.queries[:16])
+    assert _overlap(sharded.ids, ref.ids) >= 0.9
+
+    ndp = loaded.searcher("ndpsim", PARAMS)(unit_db.queries[:16])
+    assert ndp.sim is not None and ndp.sim.qps > 0
+    assert _overlap(ndp.ids, ref.ids) >= 0.9
+    for r in (local, sharded, ndp):
+        assert isinstance(r, SearchResult)
+        assert r.ids.shape == (16, PARAMS.k)
+
+
+def test_searcher_cache_reuses_compiled_fn(unit_index):
+    a = unit_index.searcher("local", PARAMS)
+    b = unit_index.searcher("local", PARAMS)
+    assert a is b
+    c = unit_index.searcher("local", dataclasses.replace(PARAMS, ef=49))
+    assert c is not a
+
+
+# ---------------------------------------------------------------------------
+# legacy shims (one-release deprecation window)
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_vdzip_and_run_search_shims(unit_db, unit_index):
+    from repro.core import vdzip
+    from repro.core.search import SearchConfig, run_search
+
+    with pytest.deprecated_call():
+        legacy = vdzip.build(unit_db, m=8, seg=16, dfloat_recall_target=None)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res = vdzip.evaluate(legacy, unit_db, ef=48, k=10, use_dfloat=False)
+    assert "hops" not in res, "trace must now be opt-in"
+    ref = unit_index.search(unit_db.queries, PARAMS)
+    np.testing.assert_array_equal(
+        legacy.search(unit_db.queries, ef=48, k=10, use_dfloat=False)["ids"],
+        ref.ids)
+
+    cfg = SearchConfig(ef=48, k=10, metric="l2", seg=16, use_fee=True)
+    with pytest.deprecated_call():
+        out = run_search(unit_index.db_rot, unit_index.graph,
+                         unit_index.transform_queries(unit_db.queries[:8]),
+                         cfg, fee_params=unit_index.fee.to_dict())
+    assert out["ids"].shape == (8, 10)
+
+
+def test_make_fee_params_shim_warns(unit_index):
+    from repro.core import fee as fee_mod
+
+    with pytest.deprecated_call():
+        fp = fee_mod.make_fee_params(unit_index.spca, unit_index.fee.to_dict())
+    assert isinstance(fp, FeeParams)

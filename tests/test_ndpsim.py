@@ -39,10 +39,11 @@ def test_hit_rate_increases_with_capacity():
 
 @pytest.fixture(scope="module")
 def sim_inputs(unit_db, unit_index):
-    out = unit_index.search(unit_db.queries[:48], ef=32, k=10, use_fee=True,
-                            trace=True)
+    from repro.index import SearchParams
+    out = unit_index.search(unit_db.queries[:48],
+                            SearchParams(ef=32, k=10, trace=True))
     owner = gmod.map_owners(unit_db.n, NASZIP_2CH.n_subchannels, "shuffle")
-    return out["trace"], owner, unit_index
+    return out, owner, unit_index
 
 
 def _run(sim_inputs, **kw):
@@ -72,15 +73,17 @@ def test_prefetch_hits_bounded_and_helpful(sim_inputs):
     assert on.prefetch_hit > 0.3, "locality should give real prefetch coverage"
 
 
+@pytest.mark.slow
 def test_dfloat_reduces_dram_traffic(unit_db, unit_index_dfloat):
-    out = unit_index_dfloat.search(unit_db.queries[:32], ef=32, k=10,
-                                   use_fee=True, trace=True)
+    from repro.index import SearchParams
+    out = unit_index_dfloat.search(unit_db.queries[:32],
+                                   SearchParams(ef=32, k=10, trace=True))
     owner = gmod.map_owners(unit_db.n, NASZIP_2CH.n_subchannels, "shuffle")
     flags = SimFlags()
-    with_df = simulate_ndp(out["trace"], owner,
+    with_df = simulate_ndp(out, owner,
                            unit_index_dfloat.graph.base_adjacency, NASZIP_2CH,
                            flags, unit_index_dfloat.dfloat_cfg, 16)
-    no_df = simulate_ndp(out["trace"], owner,
+    no_df = simulate_ndp(out, owner,
                          unit_index_dfloat.graph.base_adjacency, NASZIP_2CH,
                          flags, fp32_config(unit_db.dim), 16)
     assert with_df.dram_bytes_per_query < no_df.dram_bytes_per_query

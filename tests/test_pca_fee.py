@@ -54,17 +54,17 @@ def test_energy_expectation_property():
 
 
 def test_beta_ge_one_and_protects(unit_db, unit_index):
-    fit = unit_index.fee_fit
-    assert (fit["beta"] >= 1.0 - 1e-6).all()
-    assert fit["beta"][-1] == pytest.approx(1.0)
+    fit = unit_index.fee
+    assert (fit.beta >= 1.0 - 1e-6).all()
+    assert fit.beta[-1] == pytest.approx(1.0)
     # P(est < d_all) >= p_target on held-out pairs (the Chebyshev guarantee)
     rng = np.random.default_rng(2)
     db_rot = unit_index.db_rot
     q = unit_index.transform_queries(unit_db.queries[:32])
     cum, full = pca_mod.partial_scores(db_rot[rng.choice(len(db_rot), 256)], q, 16, "l2")
-    est = fit["alpha"][None, None] * cum / fit["beta"][None, None]
+    est = fit.alpha[None, None] * cum / fit.beta[None, None]
     frac_safe = (est[:, :, :-1] <= full[:, :, None] + 1e-9).mean()
-    assert frac_safe >= fit["p_target"] - 0.05, frac_safe
+    assert frac_safe >= fit.p_target - 0.05, frac_safe
 
 
 @given(n_cases=15)
@@ -97,9 +97,8 @@ def test_fee_distance_semantics(draw):
 def test_fee_never_rejects_with_inf_threshold(unit_index):
     x = unit_index.db_rot[:100]
     q = unit_index.db_rot[101]
-    fit = unit_index.fee_fit
+    fp = unit_index.fee.params
     _, rej, _ = fee_mod.fee_distance(
         jnp.asarray(q), jnp.asarray(x), jnp.float32(3e38),
-        jnp.asarray(fit["alpha"]), jnp.asarray(fit["beta"]),
-        jnp.asarray(fit["margin"]), seg=16, metric="l2")
+        fp.alpha, fp.beta, fp.margin, seg=16, metric="l2")
     assert not np.asarray(rej).any()

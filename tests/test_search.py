@@ -2,22 +2,21 @@
 import numpy as np
 import pytest
 
-from repro.core import vdzip
-from repro.core.search import SearchConfig, run_search
-from repro.data.synthetic import recall_at_k
+from repro.core.search import SearchConfig
+from repro.index import SearchParams
 
 
 def test_exact_search_recall(unit_db, unit_index):
-    res = vdzip.evaluate(unit_index, unit_db, ef=64, k=10, use_fee=False,
-                         use_dfloat=False)
+    res = unit_index.evaluate(unit_db, SearchParams(ef=64, k=10, use_fee=False,
+                                                    use_dfloat=False))
     assert res["recall"] >= 0.92, res
 
 
 def test_fee_preserves_recall_within_budget(unit_db, unit_index):
-    base = vdzip.evaluate(unit_index, unit_db, ef=64, k=10, use_fee=False,
-                          use_dfloat=False)
-    fee = vdzip.evaluate(unit_index, unit_db, ef=64, k=10, use_fee=True,
-                         use_dfloat=False)
+    base = unit_index.evaluate(unit_db, SearchParams(ef=64, k=10, use_fee=False,
+                                                     use_dfloat=False, trace=True))
+    fee = unit_index.evaluate(unit_db, SearchParams(ef=64, k=10, use_fee=True,
+                                                    use_dfloat=False, trace=True))
     assert fee["recall"] >= base["recall"] - 0.03, (base, fee)
     assert fee["dims_per_eval"] <= base["dims_per_eval"] + 1e-6
     # claim: FEE reduces dims touched (paper Fig. 8: ~does more on steeper
@@ -25,27 +24,27 @@ def test_fee_preserves_recall_within_budget(unit_db, unit_index):
     assert fee["dims_per_eval"] < base["dims_per_eval"]
 
 
+@pytest.mark.slow
 def test_dfloat_search_recall(unit_db, unit_index_dfloat):
-    res = vdzip.evaluate(unit_index_dfloat, unit_db, ef=64, k=10, use_fee=True,
-                         use_dfloat=True)
+    res = unit_index_dfloat.evaluate(unit_db, SearchParams(ef=64, k=10))
     assert res["recall"] >= 0.85, res
     assert (unit_index_dfloat.dfloat_cfg.bursts_per_vector()
             <= 16), "compression should not exceed fp32 bursts (64d -> 16)"
 
 
-def test_ip_metric_search(unit_ip_db):
-    idx = vdzip.build(unit_ip_db, m=8, seg=16, dfloat_recall_target=None)
-    res = vdzip.evaluate(idx, unit_ip_db, ef=96, k=10, use_fee=True,
-                         use_dfloat=False)
-    base = vdzip.evaluate(idx, unit_ip_db, ef=96, k=10, use_fee=False,
-                          use_dfloat=False)
+def test_ip_metric_search(unit_ip_db, unit_ip_index):
+    idx = unit_ip_index
+    res = idx.evaluate(unit_ip_db, SearchParams(ef=96, k=10, use_fee=True,
+                                                use_dfloat=False, trace=True))
+    base = idx.evaluate(unit_ip_db, SearchParams(ef=96, k=10, use_fee=False,
+                                                 use_dfloat=False, trace=True))
     assert res["recall"] >= base["recall"] - 0.03
     assert res["dims_per_eval"] <= base["dims_per_eval"]
 
 
 def test_recall_increases_with_ef(unit_db, unit_index):
-    recalls = [vdzip.evaluate(unit_index, unit_db, ef=ef, k=10, use_fee=True,
-                              use_dfloat=False)["recall"]
+    recalls = [unit_index.evaluate(unit_db, SearchParams(ef=ef, k=10,
+                                                         use_dfloat=False))["recall"]
                for ef in (8, 32, 96)]
     assert recalls[0] <= recalls[1] + 0.02 <= recalls[2] + 0.04, recalls
     assert recalls[-1] >= 0.93
@@ -53,19 +52,28 @@ def test_recall_increases_with_ef(unit_db, unit_index):
 
 def test_trace_no_duplicate_evaluations(unit_db, unit_index):
     """Visited-set invariant: a node is distance-evaluated at most once."""
-    out = unit_index.search(unit_db.queries[:8], ef=32, k=10, use_fee=False,
-                            trace=True)
-    nbrs = out["trace"]["nbrs"]                      # (Q, H, M)
+    out = unit_index.search(unit_db.queries[:8],
+                            SearchParams(ef=32, k=10, use_fee=False, trace=True))
+    nbrs = out.trace["nbrs"]                         # (Q, H, M)
     for qi in range(nbrs.shape[0]):
         ids = nbrs[qi][nbrs[qi] >= 0]
         assert len(ids) == len(set(ids.tolist())), "duplicate evaluation"
 
 
 def test_trace_hops_bounded_and_consistent(unit_db, unit_index):
-    out = unit_index.search(unit_db.queries[:8], ef=16, k=5, use_fee=True,
-                            trace=True)
+    out = unit_index.search(unit_db.queries[:8],
+                            SearchParams(ef=16, k=5, trace=True))
     cfg_hops = SearchConfig(ef=16).hops()
-    assert (out["hops"] <= cfg_hops).all()
+    assert (out.hops <= cfg_hops).all()
     # dims accounting consistent with segs trace
-    segs = out["trace"]["segs"]
-    assert (out["dims"] == segs.sum((1, 2)) * 16).all()
+    assert (out.dims == out.trace["segs"].sum((1, 2)) * 16).all()
+
+
+def test_untraced_search_uses_early_termination(unit_db, unit_index):
+    """The fast while_loop path and the fixed-budget scan path must agree on
+    the returned neighbors (trace is opt-in, not a semantic change)."""
+    fast = unit_index.search(unit_db.queries[:16], SearchParams(ef=32, k=10))
+    traced = unit_index.search(unit_db.queries[:16],
+                               SearchParams(ef=32, k=10, trace=True))
+    assert fast.trace is None and traced.trace is not None
+    np.testing.assert_array_equal(fast.ids, traced.ids)

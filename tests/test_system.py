@@ -2,16 +2,16 @@
 import numpy as np
 import pytest
 
-from repro.core import vdzip
-from repro.data.synthetic import make_dataset
+from repro.index import SearchParams
 
 
+@pytest.mark.slow
 def test_end_to_end_vdzip_pipeline(unit_db, unit_index_dfloat):
     """Full paper pipeline: PCA -> beta -> graph -> Dfloat -> FEE search,
     recall at the paper's operating point (recall@10 >= 0.85 on the tiny
     test DB; the full-size stand-ins hit >= 0.9 in the benchmarks)."""
     idx = unit_index_dfloat
-    res = vdzip.evaluate(idx, unit_db, ef=64, k=10, use_fee=True, use_dfloat=True)
+    res = idx.evaluate(unit_db, SearchParams(ef=64, k=10, trace=True))
     assert res["recall"] >= 0.78
     # compression actually engaged
     assert idx.dfloat_cfg.bursts_per_vector() <= 16
@@ -26,21 +26,23 @@ def test_end_to_end_speedup_projection(unit_db, unit_index):
     from repro.ndpsim import SimFlags, simulate_ndp
     from repro.ndpsim.timing import NASZIP_2CH
 
-    out = unit_index.search(unit_db.queries[:48], ef=32, k=10, use_fee=True,
-                            trace=True)
-    out_nofee = unit_index.search(unit_db.queries[:48], ef=32, k=10,
-                                  use_fee=False, trace=True)
+    out = unit_index.search(unit_db.queries[:48],
+                            SearchParams(ef=32, k=10, trace=True))
+    out_nofee = unit_index.search(unit_db.queries[:48],
+                                  SearchParams(ef=32, k=10, use_fee=False,
+                                               trace=True))
     owner = gmod.map_owners(unit_db.n, NASZIP_2CH.n_subchannels, "shuffle")
     adj = unit_index.graph.base_adjacency
-    full = simulate_ndp(out["trace"], owner, adj, NASZIP_2CH,
+    full = simulate_ndp(out, owner, adj, NASZIP_2CH,
                         SimFlags(dam=True, lnc=True, prefetch=True),
                         unit_index.dfloat_cfg, 16)
-    naive = simulate_ndp(out_nofee["trace"], owner, adj, NASZIP_2CH,
+    naive = simulate_ndp(out_nofee, owner, adj, NASZIP_2CH,
                          SimFlags(dam=False, lnc=False, prefetch=False),
                          fp32_config(unit_db.dim), 16)
     assert full.qps > 2.0 * naive.qps, (full.qps, naive.qps)
 
 
+@pytest.mark.slow
 def test_quickstart_example_runs():
     import subprocess, sys
     from pathlib import Path
