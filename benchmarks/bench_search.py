@@ -1,0 +1,138 @@
+"""Machine-readable search-performance trajectory (``BENCH_search.json``).
+
+Runs the fig15-style operating points (high recall, FEE + Dfloat on, CPU jnp
+kernel path) twice — classic one-node-per-hop (``expand=1``) and the
+multi-expansion default — and emits QPS, latency percentiles, recall@10, hops
+and dims-touched per query as JSON, so every PR from here on can diff search
+performance mechanically.
+
+Measurement protocol: the two configs are timed *interleaved* (A/B/A/B...)
+and QPS uses the min-of-N batch time — on a shared/1-core box the minimum is
+the noise-robust estimate of the true cost (timeit-style), and interleaving
+cancels slow drift that would otherwise bias whichever config ran second.
+
+Dataset defaults to ``sift`` (the paper's headline workload); override with
+``BENCH_DATASET=unit`` for the CI smoke job (tiny synthetic DB, seconds).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import FAST, N_QUERIES
+from repro.data.synthetic import make_dataset, recall_at_k
+from repro.index import Index, IndexSpec, SearchParams
+
+DEFAULT_EXPAND = SearchParams().expand
+
+# Fixed fig15-style high-recall operating points (recall@10 >= 0.99 on the
+# synthetic stand-ins), compared the way ANN benchmarks compare engines:
+# equal recall, per-engine ef.  Multi-expansion over-explores per hop (it
+# pops `expand` nodes against one stale threshold), so it reaches the same
+# recall at a smaller beam — ef=56 lands within 0.1pt of the expand=1 ef=64
+# baseline on sift.  Both points are fixed, not re-calibrated per run, so the
+# QPS trajectory across PRs measures the engine, not the calibration.
+BENCH_EF = 64          # expand=1 baseline beam
+MULTI_EF = 56          # equal-recall multi-expansion beam
+TINY_EF = 32           # CI smoke (unit dataset) — same ef both sides
+
+N_REPS = 12            # interleaved QPS reps per config
+N_LAT = 32             # single-query latency samples per config
+
+
+def _timed(run, q) -> float:
+    t0 = time.perf_counter()
+    run(q)
+    return time.perf_counter() - t0
+
+
+def _stats(idx, db, params: SearchParams, q, qps: float) -> dict:
+    """Latency percentiles (single-query calls), recall, trace statistics."""
+    run = idx.searcher("local", params)
+    lat_ms = np.sort([_timed(run, q[i : i + 1]) * 1e3
+                      for i in range(min(N_LAT, len(q)))])
+    out = run(q)
+    tr = idx.searcher("local", dataclasses.replace(params, trace=True))(q)
+    return dict(
+        expand=params.expand,
+        ef=params.ef,
+        qps=round(qps, 1),
+        p50_latency_ms=round(float(np.percentile(lat_ms, 50)), 3),
+        p99_latency_ms=round(float(np.percentile(lat_ms, 99)), 3),
+        recall_at_10=round(float(recall_at_k(out.ids, db.gt[: len(q)], 10)), 4),
+        hops_per_query=round(float(tr.hops.mean()), 2),
+        dist_evals_per_query=round(float(tr.n_eval.mean()), 1),
+        dims_per_query=round(float(tr.dims.mean()), 1),
+    )
+
+
+def run_json(out_path: str | Path = "BENCH_search.json",
+             dataset: str | None = None) -> dict:
+    dataset = dataset or os.environ.get("BENCH_DATASET", "sift")
+    db = make_dataset(dataset)
+    tiny = db.n <= 4096
+    spec = (IndexSpec.for_db(db, m=8, dfloat_recall_target=None) if tiny
+            else IndexSpec.for_db(db, m=16, dfloat_recall_target=0.9,
+                                  dfloat_proxy=True))
+    idx = Index.build(db, spec, cache_key=dataset)
+    use_dfloat = spec.dfloat_recall_target is not None
+    n_queries = min(N_QUERIES, len(db.queries))
+    q = db.queries[:n_queries]
+
+    common = dict(k=10, use_fee=True, use_dfloat=use_dfloat,
+                  fee_backend="jnp")
+    p_base = SearchParams(expand=1, ef=TINY_EF if tiny else BENCH_EF, **common)
+    p_multi = SearchParams(expand=DEFAULT_EXPAND,
+                           ef=TINY_EF if tiny else MULTI_EF, **common)
+
+    runs = [idx.searcher("local", p) for p in (p_base, p_multi)]
+    for r in runs:
+        r(q)                                    # compile batch shape
+        r(q[:1])                                # compile 1-query shape
+    best = [float("inf")] * len(runs)
+    for _ in range(N_REPS):
+        for i, r in enumerate(runs):
+            best[i] = min(best[i], _timed(r, q))
+
+    base = _stats(idx, db, p_base, q, n_queries / best[0])
+    multi = _stats(idx, db, p_multi, q, n_queries / best[1])
+
+    result = dict(
+        bench="fig15_qps_search",
+        dataset=dataset,
+        n_vectors=db.n,
+        dim=db.dim,
+        metric=db.metric,
+        n_queries=n_queries,
+        backend="local",
+        fee_backend="jnp",
+        fast_mode=FAST,
+        platform=dict(machine=platform.machine(),
+                      python=platform.python_version()),
+        baseline=base,
+        multi_expansion=multi,
+        speedup_qps=round(multi["qps"] / max(base["qps"], 1e-9), 2),
+        hops_reduction=round(base["hops_per_query"]
+                             / max(multi["hops_per_query"], 1e-9), 2),
+        recall_delta=round(multi["recall_at_10"] - base["recall_at_10"], 4),
+    )
+    Path(out_path).write_text(json.dumps(result, indent=1) + "\n")
+    print(f"[bench_search] wrote {out_path}: "
+          f"qps {base['qps']} -> {multi['qps']} "
+          f"({result['speedup_qps']}x), hops {base['hops_per_query']} -> "
+          f"{multi['hops_per_query']} ({result['hops_reduction']}x), "
+          f"recall {base['recall_at_10']} -> {multi['recall_at_10']}")
+    return result
+
+
+def main(csv) -> None:
+    res = csv.timed("bench_search_json", run_json)
+    csv.rows.append(("bench_search_speedup", 0.0,
+                     dict(speedup_qps=res["speedup_qps"],
+                          hops_reduction=res["hops_reduction"])))

@@ -36,7 +36,8 @@ def get_index(name: str, dfloat: bool = True):
 def calibrated_ef(name: str, target: float = 0.9, use_fee: bool = True,
                   use_dfloat: bool = True) -> int:
     """Smallest ef on the grid reaching recall@10 >= target."""
-    p = cache_path(f"ef/{name}/{target}/{use_fee}/{use_dfloat}/v2", ".json")
+    # v3: multi-expansion default (expand=4) shifts recall-vs-ef slightly
+    p = cache_path(f"ef/{name}/{target}/{use_fee}/{use_dfloat}/v3", ".json")
     if p.exists():
         return json.loads(p.read_text())["ef"]
     db, idx = get_index(name)

@@ -5,12 +5,27 @@ Two variants share one hop body:
   * ``scan``   — fixed hop budget, emits a per-hop trace consumed by the
                  DIMM-NDP performance model (``repro.ndpsim``)
 
-Semantics follow Fig. 1: a size-``ef`` candidate priority queue (sorted beam);
-each hop expands the nearest unexpanded entry, gathers its (fixed-width)
-neighbor list, computes FEE-sPCA distances against the current threshold
-(= farthest beam entry), and merge-sorts survivors into the beam.  A visited
-bitmap prevents re-evaluation.  Early-exited candidates are visited but not
-inserted — this is exactly the recall/compute trade the paper's beta corrects.
+Semantics follow Fig. 1 with the frontier batching used by GPU graph-ANNS
+engines (CAGRA) and NDP traversal accelerators (NDSEARCH): a size-``ef``
+candidate priority queue (sorted beam); each hop pops the ``expand`` nearest
+unexpanded entries, gathers all ``expand * M`` neighbor lists in one fused
+gather, computes FEE-sPCA distances against the current threshold (= farthest
+beam entry) through the ``kernels.ops.fee_distance`` dispatcher, and merges
+survivors into the beam with one ``lax.top_k`` over ``ef + expand*M``
+candidates.  A visited bitmap plus a sort-based first-occurrence dedup
+prevents re-evaluation — including duplicates *across* the frontier batch's
+neighbor lists.  Early-exited candidates are visited but not inserted — this
+is exactly the recall/compute trade the paper's beta corrects.
+
+``expand=1`` reproduces the classic one-node-per-hop HNSW loop; larger values
+amortize gather/sort/host cost over ~``expand``x fewer hops at equal recall.
+
+Trace layout (per query): ``node`` is (H, E) — the up-to-``expand`` nodes
+popped per hop (-1 pad) — and ``nbrs``/``segs``/``cand_d``/``src`` are (H, L)
+with L = max(M, E*M/2): the frontier batch after the fresh-first compaction,
+in pop order; ``src[j]`` is the pop slot (0..E-1) whose neighbor list slot
+``j`` came from.  ``expand=1`` traces skip compaction (L = M) and are
+shape-compatible with the legacy (H, M) contract along the last axis.
 """
 from __future__ import annotations
 
@@ -24,73 +39,162 @@ import numpy as np
 
 from repro.core import fee as fee_mod
 from repro.core.fee import FeeParams
+from repro.kernels import ops as kops
 
 BIG = jnp.float32(3.0e38)
 
+FEE_BACKENDS = ("auto", "jnp", "pallas")
 
-@dataclasses.dataclass
+
+@dataclasses.dataclass(frozen=True)
 class SearchConfig:
     ef: int = 64
     k: int = 10
     metric: str = "l2"
     seg: int = 16               # FEE checkpoint granularity (features / access)
-    max_hops: int = 0           # 0 -> auto (4*ef)
+    max_hops: int = 0           # 0 -> auto (4*ef expansions / expand per hop)
     use_fee: bool = False
+    expand: int = 4             # beam entries popped per hop (frontier batch)
+    fee_backend: str = "auto"   # kernels.ops dispatch: auto | jnp | pallas
+
+    def __post_init__(self):
+        if self.expand < 1:
+            raise ValueError(f"expand must be >= 1, got {self.expand}")
+        if self.fee_backend not in FEE_BACKENDS:
+            raise ValueError(f"fee_backend={self.fee_backend!r}; expected one "
+                             f"of {FEE_BACKENDS}")
 
     def hops(self):
-        return self.max_hops or 4 * self.ef
+        """Hop budget for the traced (fixed-length scan) path: the legacy
+        4*ef expansion budget spread over ``expand``-wide hops."""
+        return self.max_hops or max(-(-4 * self.ef // self.expand), 8)
 
 
-def _dedup_mask(ids):
-    """True for the first occurrence of each id within the (small) list."""
-    m = ids.shape[0]
-    eq = ids[:, None] == ids[None, :]
-    earlier = jnp.tril(eq, k=-1).any(axis=1)
-    return ~earlier
+# Below this frontier width the vectorized pairwise compare beats the sort:
+# XLA's CPU sort + scatter are scalar loops (~12x slower than the (n, n) eq
+# matrix at n<=128, measured), while the O(n^2) tril fits in cache.  The
+# sort-based path takes over where the quadratic blowup would actually bite
+# (wide frontiers / the all-gathered cross-shard merge at high shard counts).
+_DEDUP_SORT_MIN = 256
+
+
+def first_occurrence_mask(ids, valid):
+    """True for the first *valid* occurrence of each id within the batch.
+
+    Replaces the old ``_dedup_mask`` (pairwise over one neighbor list): the
+    mask now spans the whole gathered frontier batch — duplicates *across*
+    the ``expand`` neighbor lists of one hop are caught too — and invalid
+    lanes can never shadow a real id (the old mask compared padding-clamped
+    ids, so a padded 0 hid a genuine neighbor 0).  Dispatches between a
+    cache-friendly pairwise compare (small n) and a sort-based
+    first-occurrence pass (O(n log n), large n).
+    """
+    n = ids.shape[0]
+    if n < _DEDUP_SORT_MIN:
+        key = jnp.where(valid, ids.astype(jnp.int32), -1)
+        eq = (key[:, None] == key[None, :]) & valid[None, :]
+        earlier = jnp.tril(eq, k=-1).any(axis=1)
+        return ~earlier & valid
+    key = jnp.where(valid, ids.astype(jnp.int32), jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key)                    # stable: ties keep pop order
+    sk = key[order]
+    firsts = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    return jnp.zeros((n,), bool).at[order].set(firsts) & valid
+
+
+def pop_frontier(beam_ids, beam_d, expanded, e: int):
+    """Pop the ``e`` nearest unexpanded beam entries (the hop's frontier).
+
+    Returns (nodes (e,), sel (e,), expanded'): ``nodes`` is -1 where fewer
+    than ``e`` entries are active; inactive picks are already expanded or
+    empty (d >= BIG), so blanket-setting ``expanded`` on them is a no-op.
+    Shared by the local and sharded hop bodies.
+    """
+    active = (~expanded) & (beam_d < BIG)
+    done = ~active.any()
+    _, idxs = jax.lax.top_k(-jnp.where(active, beam_d, BIG), e)
+    sel = active[idxs] & ~done
+    nodes = jnp.where(sel, beam_ids[idxs], -1)
+    return nodes, sel, expanded.at[idxs].set(True)
+
+
+def merge_beam(beam_ids, beam_d, expanded, cand_ids, cand_d):
+    """One top-k merge of the beam with the hop's scored candidates.
+
+    ``lax.top_k`` on equal keys prefers lower indices, so beam entries win
+    ties against candidates (matching the stable-argsort semantics of the
+    classic loop).  Shared by the local and sharded hop bodies.
+    """
+    ef = beam_ids.shape[0]
+    all_ids = jnp.concatenate([beam_ids, cand_ids])
+    all_d = jnp.concatenate([beam_d, cand_d])
+    all_exp = jnp.concatenate([expanded, jnp.zeros(cand_d.shape[0], bool)])
+    neg_d, order = jax.lax.top_k(-all_d, ef)
+    beam_ids, beam_d = all_ids[order], -neg_d
+    return beam_ids, beam_d, all_exp[order] | (beam_d >= BIG)
+
+
+def _score(q, tgt, threshold, fee: FeeParams | None, cfg: SearchConfig):
+    """FEE/exact distances for one gathered frontier batch, routed through the
+    kernel dispatcher (Pallas with DMA skipping on TPU, jnp oracle on CPU)."""
+    if cfg.use_fee:
+        return kops.fee_distance(q, tgt, threshold, fee.alpha, fee.beta,
+                                 fee.margin, seg=cfg.seg, metric=cfg.metric,
+                                 backend=cfg.fee_backend)
+    score = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
+    rejected = jnp.zeros(tgt.shape[0], bool)
+    segs_used = jnp.full((tgt.shape[0],), tgt.shape[1] // cfg.seg, jnp.int32)
+    return score, rejected, segs_used
 
 
 def _hop_body(state, vectors, adj, q, fee: FeeParams | None, cfg: SearchConfig):
     beam_ids, beam_d, expanded, visited = state
     ef = beam_ids.shape[0]
-    active = (~expanded) & (beam_d < BIG)
-    done = ~active.any()
-    i = jnp.argmin(jnp.where(active, beam_d, BIG))
-    node = beam_ids[i]
-    expanded = expanded.at[i].set(True)
+    e, m = min(cfg.expand, ef), adj.shape[1]
+    nodes, sel, expanded = pop_frontier(beam_ids, beam_d, expanded, e)
 
-    nbrs = adj[jnp.maximum(node, 0)]                       # (M,)
-    valid = (nbrs >= 0) & ~done
+    # ---- one fused gather of all E neighbor lists
+    nbrs = adj[jnp.maximum(nodes, 0)].reshape(e * m)       # (E*M,)
+    valid = (nbrs >= 0) & jnp.repeat(sel, m)
     safe = jnp.maximum(nbrs, 0)
     w = safe >> 5
     bit = (jnp.uint32(1) << (safe & 31).astype(jnp.uint32))
     seen = (visited[w] & bit) != 0
-    fresh = valid & ~seen & _dedup_mask(safe)
+    fresh = valid & ~seen & first_occurrence_mask(safe, valid)
+
+    # ---- fresh-first frontier compaction (expand > 1): after the visited/
+    # dedup filter, typically well under half the E*M slots survive, so the
+    # downstream gather, scoring, visited scatter and beam merge run on an
+    # L = E*M/2 budget instead of the full batch.  top_k on the boolean mask
+    # is a *stable* partition (ties keep pop order) and costs far less than a
+    # sort on XLA CPU.  Overflowing fresh candidates are dropped *unmarked*:
+    # they stay discoverable through other parents on later hops (recall
+    # parity holds; see tests/test_expand.py).
+    if e > 1:
+        l = max(m, (e * m) // 2)
+        _, keep = jax.lax.top_k(fresh.astype(jnp.float32), l)
+        nbrs, safe, fresh = nbrs[keep], safe[keep], fresh[keep]
+        w, bit = safe >> 5, (jnp.uint32(1) << (safe & 31).astype(jnp.uint32))
+        src = keep // m                                    # parent pop slot
+    else:
+        src = jnp.arange(e * m, dtype=jnp.int32) // m
     visited = visited.at[w].add(jnp.where(fresh, bit, jnp.uint32(0)))
 
     threshold = beam_d[-1]
-    tgt = vectors[safe]                                    # (M, D) gather
-    if cfg.use_fee:
-        score, rejected, segs_used = fee_mod.fee_distance(
-            q, tgt, threshold, fee.alpha, fee.beta, fee.margin,
-            seg=cfg.seg, metric=cfg.metric)
-    else:
-        score = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
-        rejected = jnp.zeros_like(valid)
-        segs_used = jnp.full(nbrs.shape, tgt.shape[1] // cfg.seg, jnp.int32)
+    tgt = vectors[safe]                                    # (L, D) gather
+    score, rejected, segs_used = _score(q, tgt, threshold, fee, cfg)
 
+    # ---- single top-k beam merge over (ef + L) candidates
     cand_d = jnp.where(fresh & ~rejected, score, BIG)
-    all_ids = jnp.concatenate([beam_ids, safe])
-    all_d = jnp.concatenate([beam_d, cand_d])
-    all_exp = jnp.concatenate([expanded, jnp.zeros_like(fresh)])
-    order = jnp.argsort(all_d)[:ef]
-    beam_ids, beam_d = all_ids[order], all_d[order]
-    expanded = all_exp[order] | (beam_d >= BIG)
+    beam_ids, beam_d, expanded = merge_beam(beam_ids, beam_d, expanded,
+                                            safe, cand_d)
 
     trace = dict(
-        node=jnp.where(done, -1, node).astype(jnp.int32),
+        node=nodes.astype(jnp.int32),
         nbrs=jnp.where(fresh, nbrs, -1).astype(jnp.int32),
         segs=jnp.where(fresh, segs_used, 0).astype(jnp.int32),
         cand_d=cand_d,                                   # BIG unless accepted
+        src=jnp.where(fresh, src, -1).astype(jnp.int32),  # parent of slot j
         n_eval=fresh.sum().astype(jnp.int32),
         dims=(jnp.where(fresh, segs_used, 0).sum() * cfg.seg).astype(jnp.int32),
     )
@@ -108,11 +212,51 @@ def _init_state(q, entry, vectors, cfg: SearchConfig, n_words):
     return beam_ids, beam_d, expanded, visited
 
 
+@partial(jax.jit, static_argnames=("cfg", "trace"))
+def _search_batch(vectors, adj, fee, queries, entries, *, cfg: SearchConfig,
+                  trace: bool):
+    """Top-level jitted batch search.
+
+    ``vectors``/``adj`` are *arguments*, not closure constants, so XLA keys
+    the executable on (shapes, cfg, trace): building a second same-shape
+    index — or re-creating a searcher — never re-traces or re-lowers.
+    """
+    n_words = -(-vectors.shape[0] // 32)
+
+    def search_one(q, entry):
+        state = _init_state(q, entry, vectors, cfg, n_words)
+        if trace:
+            def step(s, _):
+                s, t = _hop_body(s, vectors, adj, q, fee, cfg)
+                return s, t
+            state, traces = jax.lax.scan(step, state, None, length=cfg.hops())
+        else:
+            def cond(s):
+                _, beam_d, expanded, _ = s
+                return ((~expanded) & (beam_d < BIG)).any()
+            def body(s):
+                s, _ = _hop_body(s, vectors, adj, q, fee, cfg)
+                return s
+            state = jax.lax.while_loop(cond, body, state)
+            traces = None
+        beam_ids, beam_d, _, _ = state
+        out = dict(ids=beam_ids[: cfg.k], dists=beam_d[: cfg.k])
+        if trace:
+            out["trace"] = traces
+            out["hops"] = (traces["node"] >= 0).any(-1).sum()
+            out["n_eval"] = traces["n_eval"].sum()
+            out["dims"] = traces["dims"].sum()
+        return out
+
+    return jax.vmap(search_one)(queries, entries)
+
+
 def make_searcher(vectors, adj, cfg: SearchConfig, fee: FeeParams | dict | None = None,
                   trace: bool = False, *, fee_params=None):
     """Returns search(queries (Q,D), entries (Q,)) -> dict of results.
 
-    vectors/adj may be numpy; they are closed over as jnp constants.
+    vectors/adj may be numpy; they are passed to one shared top-level jitted
+    program (cached by shape), not closed over as constants.
     ``fee`` takes a typed :class:`FeeParams`; legacy alpha/beta/margin dicts
     are coerced (``fee_params=`` is a deprecated alias for that case).
     """
@@ -122,39 +266,16 @@ def make_searcher(vectors, adj, cfg: SearchConfig, fee: FeeParams | dict | None 
         fee = fee_params
     vectors = jnp.asarray(vectors)
     adj = jnp.asarray(adj, jnp.int32)
-    n = vectors.shape[0]
-    n_words = -(-n // 32)
     fp = FeeParams.coerce(fee)
     if cfg.use_fee and fp is None:
         raise ValueError("cfg.use_fee=True requires fee=FeeParams(...) "
                          "(use FeeParams.identity(n_seg) for plain d_part exit)")
 
-    def search_one(q, entry):
-        state = _init_state(q, entry, vectors, cfg, n_words)
-        if trace:
-            def step(s, _):
-                s, t = _hop_body(s, vectors, adj, q, fp, cfg)
-                return s, t
-            state, traces = jax.lax.scan(step, state, None, length=cfg.hops())
-        else:
-            def cond(s):
-                _, beam_d, expanded, _ = s
-                return ((~expanded) & (beam_d < BIG)).any()
-            def body(s):
-                s, _ = _hop_body(s, vectors, adj, q, fp, cfg)
-                return s
-            state = jax.lax.while_loop(cond, body, state)
-            traces = None
-        beam_ids, beam_d, _, _ = state
-        out = dict(ids=beam_ids[: cfg.k], dists=beam_d[: cfg.k])
-        if trace:
-            out["trace"] = traces
-            out["hops"] = (traces["node"] >= 0).sum()
-            out["n_eval"] = traces["n_eval"].sum()
-            out["dims"] = traces["dims"].sum()
-        return out
+    def search(queries, entries):
+        return _search_batch(vectors, adj, fp, jnp.asarray(queries),
+                             jnp.asarray(entries), cfg=cfg, trace=trace)
 
-    return jax.jit(jax.vmap(search_one))
+    return search
 
 
 @partial(jax.jit, static_argnames=("metric",))

@@ -30,9 +30,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import fee as fee_mod
+from repro.core import search as search_mod
 from repro.core.fee import FeeParams
-from repro.core.search import SearchConfig, _dedup_mask
+from repro.core.search import SearchConfig, first_occurrence_mask
 from repro.distributed import compat
+from repro.kernels import ops as kops
 
 BIG = jnp.float32(3.0e38)
 
@@ -110,16 +112,15 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
 
     def hop(state, vec_loc, ids_loc, padj_loc, q):
         beam_ids, beam_d, expanded, visited = state
-        ef = beam_ids.shape[0]
-        active = (~expanded) & (beam_d < BIG)
-        done = ~active.any()
-        i = jnp.argmin(jnp.where(active, beam_d, BIG))
-        v = beam_ids[i]
-        expanded = expanded.at[i].set(True)
+        e, mc = min(cfg.expand, beam_ids.shape[0]), padj_loc.shape[1]
+        # pop the `expand` nearest unexpanded entries; one hop now amortizes
+        # the cross-shard all_gather over E frontier nodes
+        vs, sel, expanded = search_mod.pop_frontier(beam_ids, beam_d,
+                                                    expanded, e)
 
-        # local partition of v's neighbor list (the DaM lookup — per-shard NLT)
-        slots = padj_loc[jnp.maximum(v, 0)]                 # (Mc,) local slots
-        valid = (slots >= 0) & ~done
+        # local partitions of all E neighbor lists (DaM lookup — per-shard NLT)
+        slots = padj_loc[jnp.maximum(vs, 0)].reshape(e * mc)  # local slots
+        valid = (slots >= 0) & jnp.repeat(sel, mc)
         gids = jnp.where(valid, ids_loc[jnp.maximum(slots, 0)], -1)
 
         # visited bitmap check (replicated, identical across shards)
@@ -127,14 +128,14 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
         w = hidx >> 5
         bit = jnp.uint32(1) << (hidx & 31).astype(jnp.uint32)
         seen = (visited[w] & bit) != 0
-        fresh = valid & ~seen & _dedup_mask(jnp.maximum(gids, 0))
+        fresh = valid & ~seen & first_occurrence_mask(gids, valid)
 
         threshold = beam_d[-1]
-        tgt = vec_loc[jnp.maximum(slots, 0)]                # (Mc, d) local gather
+        tgt = vec_loc[jnp.maximum(slots, 0)]            # (E*Mc, d) local gather
         if cfg.use_fee:
-            score, rejected, _segs = fee_mod.fee_distance(
+            score, rejected, _segs = kops.fee_distance(
                 q, tgt, threshold, fp.alpha, fp.beta, fp.margin,
-                seg=cfg.seg, metric=cfg.metric)
+                seg=cfg.seg, metric=cfg.metric, backend=cfg.fee_backend)
         else:
             score = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
             rejected = jnp.zeros_like(valid)
@@ -144,20 +145,21 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
         all_ids = jax.lax.all_gather(gids, model_axis).reshape(-1)
         all_d = jax.lax.all_gather(cand_d, model_axis).reshape(-1)
 
-        # replicated visited/beam update (identical on every shard)
+        # replicated visited/beam update (identical on every shard).  The
+        # batch is deduped by *hashed* bit position, not raw id: two distinct
+        # ids colliding in the hash would otherwise both scatter-add the same
+        # bit, and the carry would corrupt the neighboring bit — dropping the
+        # second one is exactly the bitmap's documented Bloom-style
+        # false-visit, with the bitmap left intact.
         ah = (jnp.maximum(all_ids, 0) & mask_bits)
         aw, abit = ah >> 5, jnp.uint32(1) << (ah & 31).astype(jnp.uint32)
-        take = (all_ids >= 0) & ((visited[aw] & abit) == 0) & _dedup_mask(jnp.maximum(all_ids, 0))
+        take = ((all_ids >= 0) & ((visited[aw] & abit) == 0)
+                & first_occurrence_mask(ah, all_ids >= 0))
         visited = visited.at[aw].add(jnp.where(take, abit, jnp.uint32(0)))
         all_d = jnp.where(take, all_d, BIG)
 
-        cat_ids = jnp.concatenate([beam_ids, all_ids])
-        cat_d = jnp.concatenate([beam_d, all_d])
-        cat_e = jnp.concatenate([expanded, jnp.zeros_like(take)])
-        order = jnp.argsort(cat_d)[:ef]
-        beam_ids, beam_d = cat_ids[order], cat_d[order]
-        expanded = cat_e[order] | (beam_d >= BIG)
-        return beam_ids, beam_d, expanded, visited
+        return (*search_mod.merge_beam(beam_ids, beam_d, expanded,
+                                       all_ids, all_d), visited)
 
     def search_one(vec_loc, ids_loc, padj_loc, q, entry):
         d0 = fee_mod.exact_distance(

@@ -10,6 +10,13 @@ signature; only construction-time options differ:
 
 Queries are always *raw* (un-rotated) vectors; each backend applies the
 index's sPCA transform and hierarchy descent itself.
+
+``SearchParams.expand`` (multi-expansion frontier batching) and
+``SearchParams.fee_backend`` (FEE kernel dispatch) thread through
+``SearchParams.to_config`` into every backend: the local jit/vmap loop, the
+sharded DaM hop (where popping ``expand`` nodes per hop amortizes the
+cross-shard all-gather), and the traced search that feeds the ndpsim engine
+(which consumes per-hop multi-node traces).
 """
 from __future__ import annotations
 

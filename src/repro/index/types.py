@@ -64,12 +64,15 @@ class SearchParams:
     k: int = 10
     use_fee: bool = True
     use_dfloat: bool = True
-    trace: bool = False        # emit per-hop traces (fixed 4*ef hop budget)
-    max_hops: int = 0          # 0 -> auto (4*ef) when tracing
+    trace: bool = False        # emit per-hop traces (fixed expansion budget)
+    max_hops: int = 0          # 0 -> auto (4*ef expansions) when tracing
+    expand: int = 4            # beam entries popped per hop (1 = classic HNSW)
+    fee_backend: str = "auto"  # FEE kernel dispatch: auto | jnp | pallas
 
     def to_config(self, metric: str, seg: int) -> SearchConfig:
         return SearchConfig(ef=self.ef, k=self.k, metric=metric, seg=seg,
-                            max_hops=self.max_hops, use_fee=self.use_fee)
+                            max_hops=self.max_hops, use_fee=self.use_fee,
+                            expand=self.expand, fee_backend=self.fee_backend)
 
 
 @dataclasses.dataclass

@@ -41,6 +41,17 @@ def _as_trace(traces) -> dict:
     return t
 
 
+def _norm_node(node: np.ndarray) -> np.ndarray:
+    """Normalize the expanded-node trace to (Q, H, E).
+
+    The multi-expansion searcher emits (Q, H, E) — up to E nodes popped per
+    hop, -1 pad; legacy single-expansion traces are (Q, H).  ``expand=1``
+    traces replay identically through either shape.
+    """
+    node = np.asarray(node)
+    return node[:, :, None] if node.ndim == 2 else node
+
+
 @dataclasses.dataclass
 class SimFlags:
     dam: bool = True          # data-aware neighbor-list mapping (§V-C2)
@@ -79,11 +90,15 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
                  hw: NDPConfig, flags: SimFlags, dfloat_cfg: DfloatConfig,
                  seg: int, name: str = "naszip") -> SimResult:
     traces = _as_trace(traces)
-    node = np.asarray(traces["node"])          # (Q, H)
-    nbrs = np.asarray(traces["nbrs"])          # (Q, H, M)
-    segs = np.asarray(traces["segs"])          # (Q, H, M)
-    cand_d = np.asarray(traces["cand_d"])      # (Q, H, M)
-    q_total, hmax = node.shape
+    node = _norm_node(traces["node"])          # (Q, H, E)
+    nbrs = np.asarray(traces["nbrs"])          # (Q, H, L)
+    segs = np.asarray(traces["segs"])          # (Q, H, L)
+    cand_d = np.asarray(traces["cand_d"])      # (Q, H, L)
+    # parent pop slot of every candidate: explicit ``src`` for compacted
+    # multi-expansion traces, fixed M-wide blocks for legacy layouts
+    src = np.asarray(traces["src"]) if "src" in traces else None
+    q_total, hmax, n_expand = node.shape
+    m_width = nbrs.shape[2] // n_expand        # neighbor slots per popped node
     n_sub = hw.n_subchannels
     n_nodes = adj.shape[0]
 
@@ -122,10 +137,13 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
         batch_time = 0.0
         # per-(query,channel) local candidate pools: {cand: dist}
         pools = [[dict() for _ in range(n_sub)] for _ in batch]
-        predictions = np.full((len(batch), n_sub), -1, np.int64)
+        # per-(query,channel) predicted next-hop nodes: up to n_expand per
+        # channel, matching the frontier width the searcher pops per hop
+        # (one-element sets for legacy expand=1 traces)
+        predictions = [[set() for _ in range(n_sub)] for _ in batch]
 
         for h in range(hmax):
-            act = [i for i, q in enumerate(batch) if node[q, h] >= 0]
+            act = [i for i, q in enumerate(batch) if (node[q, h] >= 0).any()]
             if not act:
                 break
             ch_busy = np.zeros(n_sub)
@@ -135,49 +153,51 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
 
             for i in act:
                 q = batch[i]
-                v = int(node[q, h])
+                vs = [int(v) for v in node[q, h] if v >= 0]  # this hop's frontier
                 # ---- phase 1: neighbor-list retrieval --------------------
                 if flags.dam:
-                    for c in range(n_sub):
-                        psz = int(part_size[c, v])
-                        if psz == 0:
-                            continue
-                        lbytes = _list_bytes(psz)
-                        if flags.prefetch:
-                            # a "hit" = the next-hop list is on-chip when the
-                            # hop starts: either predicted exactly, or still
-                            # resident from an earlier (pre)fetch (§V-E: failed
-                            # prefetches are retained in the LNC and reused)
-                            pf_attempts[h] += 1
-                            if predictions[i, c] == v or (
-                                flags.lnc and lnc_d[c].contains(int(part_addr[c, v]), lbytes)
-                            ):
-                                pf_hits[h] += 1
-                        nlt_miss = lnc_t[c].access(4 * v, 4) if flags.lnc else 1
-                        d_miss = (lnc_d[c].access(int(part_addr[c, v]), lbytes)
-                                  if flags.lnc else -(-lbytes // hw.line_bytes))
-                        t = hw.cache_hit_ns * 2
-                        if nlt_miss:
-                            t += hw.t_row_open_ns + t_burst
-                            dram_bytes += hw.line_bytes
-                        if d_miss:
-                            t += hw.t_row_open_ns + d_miss * t_burst
-                            dram_bytes += d_miss * hw.line_bytes
-                        ch_busy[c] += t
-                        t_nb += t
-                        energy_pj += (nlt_miss + d_miss) * hw.line_bytes * 8 * hw.e_dram_pj_per_bit
-                        energy_pj += lbytes * 8 * hw.e_cache_pj_per_bit
+                    for v in vs:
+                        for c in range(n_sub):
+                            psz = int(part_size[c, v])
+                            if psz == 0:
+                                continue
+                            lbytes = _list_bytes(psz)
+                            if flags.prefetch:
+                                # a "hit" = the next-hop list is on-chip when the
+                                # hop starts: either predicted exactly, or still
+                                # resident from an earlier (pre)fetch (§V-E: failed
+                                # prefetches are retained in the LNC and reused)
+                                pf_attempts[h] += 1
+                                if v in predictions[i][c] or (
+                                    flags.lnc and lnc_d[c].contains(int(part_addr[c, v]), lbytes)
+                                ):
+                                    pf_hits[h] += 1
+                            nlt_miss = lnc_t[c].access(4 * v, 4) if flags.lnc else 1
+                            d_miss = (lnc_d[c].access(int(part_addr[c, v]), lbytes)
+                                      if flags.lnc else -(-lbytes // hw.line_bytes))
+                            t = hw.cache_hit_ns * 2
+                            if nlt_miss:
+                                t += hw.t_row_open_ns + t_burst
+                                dram_bytes += hw.line_bytes
+                            if d_miss:
+                                t += hw.t_row_open_ns + d_miss * t_burst
+                                dram_bytes += d_miss * hw.line_bytes
+                            ch_busy[c] += t
+                            t_nb += t
+                            energy_pj += (nlt_miss + d_miss) * hw.line_bytes * 8 * hw.e_dram_pj_per_bit
+                            energy_pj += lbytes * 8 * hw.e_cache_pj_per_bit
                 else:
                     # host walks the NLT + list at the owner channel (Fig. 4a
                     # "index lookup" — on the critical path, not parallel)
-                    c = int(owner[v])
-                    lbytes = _list_bytes(int(full_size[v]))
-                    lines = -(-lbytes // hw.line_bytes)
-                    t = hw.host_nlt_lookup_ns + hw.t_row_open_ns + lines * t_burst
-                    host_ns += t
-                    t_nb += t
-                    dram_bytes += lines * hw.line_bytes
-                    energy_pj += lines * hw.line_bytes * 8 * hw.e_dram_pj_per_bit
+                    for v in vs:
+                        c = int(owner[v])
+                        lbytes = _list_bytes(int(full_size[v]))
+                        lines = -(-lbytes // hw.line_bytes)
+                        t = hw.host_nlt_lookup_ns + hw.t_row_open_ns + lines * t_burst
+                        host_ns += t
+                        t_nb += t
+                        dram_bytes += lines * hw.line_bytes
+                        energy_pj += lines * hw.line_bytes * 8 * hw.e_dram_pj_per_bit
 
                 # ---- phase 2: distance computation -----------------------
                 cand = nbrs[q, h]
@@ -194,8 +214,11 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
                         ch_busy[cc] += tc
                     else:
                         # whole list processed at owner(v); remote vectors
-                        # cross sub-channels through the host (Fig. 4b)
-                        cv = int(owner[v])
+                        # cross sub-channels through the host (Fig. 4b) —
+                        # v is the frontier node whose list candidate j is on
+                        e_slot = (int(src[q, h, j]) if src is not None
+                                  else j // m_width)
+                        cv = int(owner[int(node[q, h, e_slot])])
                         ch_busy[cv] += tc
                         if cc != cv:
                             vec_bytes = n_b * hw.burst_bytes
@@ -212,9 +235,10 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
                         n_accept_total += 1
                         pools[i][int(owner[cid])][cid] = d
 
-                # expanded node leaves every local pool
-                for c in range(n_sub):
-                    pools[i][c].pop(v, None)
+                # expanded nodes leave every local pool
+                for v in vs:
+                    for c in range(n_sub):
+                        pools[i][c].pop(v, None)
 
             # ---- phase 3: host merge + prefetch overlap ------------------
             merge_ns = hw.host_merge_base_ns + hw.host_merge_per_cand_ns * n_accept_total
@@ -223,15 +247,15 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
             if flags.prefetch and flags.dam:
                 for i in act:
                     for c in range(n_sub):
-                        if pools[i][c]:
-                            p = min(pools[i][c], key=pools[i][c].get)
-                            predictions[i, c] = p
+                        # predict the next frontier: the n_expand nearest
+                        # pool candidates per channel (1 for legacy traces)
+                        near = sorted(pools[i][c], key=pools[i][c].get)
+                        predictions[i][c] = set(near[:n_expand])
+                        for p in predictions[i][c]:
                             if flags.lnc:
                                 lnc_t[c].fill(4 * p, 4)
                                 lnc_d[c].fill(int(part_addr[c, p]),
                                               _list_bytes(int(part_size[c, p])))
-                        else:
-                            predictions[i, c] = -1
                 # prefetch DRAM streams overlap the merge window
                 pf_ns = 0.0
 
@@ -276,11 +300,11 @@ def simulate_platform(traces, dim: int, hw: PlatformConfig,
     ``bytes_per_feature``.
     """
     traces = _as_trace(traces)
-    node = np.asarray(traces["node"])
+    node = _norm_node(traces["node"])
     nbrs = np.asarray(traces["nbrs"])
     q_total = node.shape[0]
     n_eval = (nbrs >= 0).sum(axis=(1, 2))           # per query
-    hops = (node >= 0).sum(axis=1)
+    hops = (node >= 0).any(axis=2).sum(axis=1)
 
     w_bytes = n_eval * dim * bytes_per_feature
     w_flops = n_eval * dim * 3.0                    # sub, mul, add

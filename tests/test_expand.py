@@ -1,0 +1,176 @@
+"""Multi-expansion beam search: expand>1 parity vs the classic expand=1 loop,
+trace invariants of the batched-frontier layout, kernel dispatch knob, and
+ndpsim trace-contract compatibility."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.search import SearchConfig, first_occurrence_mask
+from repro.index import SearchParams
+
+PARAMS = SearchParams(ef=48, k=10, use_dfloat=False)
+
+
+def _overlap(a: np.ndarray, b: np.ndarray) -> float:
+    return float(np.mean([len(set(x.tolist()) & set(y.tolist())) / a.shape[1]
+                          for x, y in zip(a, b)]))
+
+
+# ---------------------------------------------------------------------------
+# recall / id parity across expand
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fixtures", ["l2", "ip"])
+def test_expand_recall_parity(fixtures, request, unit_db, unit_ip_db,
+                              unit_index, unit_ip_index):
+    db, idx = ((unit_db, unit_index) if fixtures == "l2"
+               else (unit_ip_db, unit_ip_index))
+    base = idx.search(db.queries, dataclasses.replace(PARAMS, expand=1))
+    multi = idx.search(db.queries, dataclasses.replace(PARAMS, expand=4))
+    r_base = base.recall(db.gt, 10)
+    r_multi = multi.recall(db.gt, 10)
+    # batched expansion explores a superset-ish frontier: recall must not drop
+    assert r_multi >= r_base - 0.005, (r_base, r_multi)
+    assert _overlap(multi.ids, base.ids) >= 0.9
+
+
+def test_expand_one_matches_classic_hop_budget():
+    # expand=1 keeps the legacy 4*ef traced hop budget exactly
+    assert SearchConfig(ef=16, expand=1).hops() == 64
+    assert SearchConfig(ef=16, expand=4).hops() == 16
+
+
+def test_expand_validation():
+    with pytest.raises(ValueError):
+        SearchConfig(expand=0)
+    with pytest.raises(ValueError):
+        SearchConfig(fee_backend="warp-drive")
+
+
+# ---------------------------------------------------------------------------
+# trace invariants of the batched frontier
+# ---------------------------------------------------------------------------
+
+
+def test_trace_shapes_and_sums(unit_db, unit_index):
+    m = unit_index.graph.base_adjacency.shape[1]
+    for expand in (1, 4):
+        out = unit_index.search(
+            unit_db.queries[:8],
+            dataclasses.replace(PARAMS, expand=expand, trace=True))
+        q, h, e = out.trace["node"].shape
+        assert e == expand
+        width = m if expand == 1 else max(m, expand * m // 2)
+        assert out.trace["nbrs"].shape == (q, h, width)
+        assert out.trace["segs"].shape == out.trace["nbrs"].shape
+        # every evaluated candidate records its parent pop slot
+        src = out.trace["src"]
+        evald = out.trace["nbrs"] >= 0
+        assert ((src >= 0) == evald).all()
+        assert (src[evald] < expand).all()
+        # n_eval == evaluated (fresh) candidates; dims == seg * segs touched
+        assert (out.n_eval == (out.trace["nbrs"] >= 0).sum((1, 2))).all()
+        assert (out.dims == out.trace["segs"].sum((1, 2)) * unit_index.seg).all()
+        # hop count == hops with at least one popped node, bounded by budget
+        cfg_hops = SearchConfig(ef=PARAMS.ef, expand=expand).hops()
+        assert (out.hops == (out.trace["node"] >= 0).any(-1).sum(-1)).all()
+        assert (out.hops <= cfg_hops).all()
+
+
+def test_no_duplicate_evaluations_across_frontier_batch(unit_db, unit_index):
+    """The sort/pairwise dedup must catch duplicates *across* the expand
+    neighbor lists gathered in one hop, not just within one list."""
+    out = unit_index.search(unit_db.queries[:8],
+                            dataclasses.replace(PARAMS, expand=4, trace=True))
+    nbrs = out.trace["nbrs"]                         # (Q, H, E*M)
+    for qi in range(nbrs.shape[0]):
+        ids = nbrs[qi][nbrs[qi] >= 0]
+        assert len(ids) == len(set(ids.tolist())), "duplicate evaluation"
+
+
+def test_first_occurrence_mask_semantics():
+    import jax.numpy as jnp
+
+    ids = jnp.asarray([5, 3, 5, 0, 3, 7], jnp.int32)
+    valid = jnp.asarray([True, True, True, True, True, False])
+    got = np.asarray(first_occurrence_mask(ids, valid))
+    np.testing.assert_array_equal(got, [True, True, False, True, False, False])
+    # a padded (invalid) id 0 must not shadow a later genuine id 0
+    ids = jnp.asarray([0, 4, 0], jnp.int32)
+    valid = jnp.asarray([False, True, True])
+    np.testing.assert_array_equal(np.asarray(first_occurrence_mask(ids, valid)),
+                                  [False, True, True])
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch knob
+# ---------------------------------------------------------------------------
+
+
+def test_fee_backend_forced_jnp_matches_auto(unit_db, unit_index):
+    auto = unit_index.search(unit_db.queries[:16],
+                             dataclasses.replace(PARAMS, use_fee=True))
+    jnp_ = unit_index.search(unit_db.queries[:16],
+                             dataclasses.replace(PARAMS, use_fee=True,
+                                                 fee_backend="jnp"))
+    np.testing.assert_array_equal(auto.ids, jnp_.ids)
+
+
+@pytest.mark.slow
+def test_fee_backend_pallas_interpret_matches_jnp(unit_db, unit_index):
+    """A/B knob: the Pallas kernel (interpret mode on CPU) and the jnp oracle
+    must return the same neighbors through the full search loop."""
+    ref = unit_index.search(unit_db.queries[:4],
+                            dataclasses.replace(PARAMS, ef=16, use_fee=True,
+                                                fee_backend="jnp"))
+    pal = unit_index.search(unit_db.queries[:4],
+                            dataclasses.replace(PARAMS, ef=16, use_fee=True,
+                                                fee_backend="pallas"))
+    assert _overlap(pal.ids, ref.ids) >= 0.9
+
+
+# ---------------------------------------------------------------------------
+# ndpsim trace contract
+# ---------------------------------------------------------------------------
+
+
+def test_ndpsim_simresult_unchanged_for_expand1(unit_db, unit_index):
+    """The engine must treat an expand=1 (Q, H, 1) node trace exactly like the
+    legacy (Q, H) layout — same SimResult to the last float."""
+    from repro.core import graph as gmod
+    from repro.ndpsim import SimFlags, simulate_ndp
+    from repro.ndpsim.timing import NASZIP_2CH
+
+    out = unit_index.search(unit_db.queries[:16],
+                            dataclasses.replace(PARAMS, expand=1, trace=True))
+    owner = gmod.map_owners(unit_db.n, NASZIP_2CH.n_subchannels, "shuffle")
+    legacy = dict(out.trace)
+    legacy["node"] = legacy["node"][:, :, 0]          # old (Q, H) contract
+    a = simulate_ndp(out, owner, unit_index.graph.base_adjacency, NASZIP_2CH,
+                     SimFlags(), unit_index.dfloat_cfg, unit_index.seg)
+    b = simulate_ndp(legacy, owner, unit_index.graph.base_adjacency, NASZIP_2CH,
+                     SimFlags(), unit_index.dfloat_cfg, unit_index.seg)
+    for f in ("qps", "avg_latency_us", "t_neighbor_us", "t_distance_us",
+              "t_partial_us", "lnc_t_hit", "lnc_d_hit", "prefetch_hit",
+              "dram_bytes_per_query", "energy_uj_per_query"):
+        assert getattr(a, f) == getattr(b, f), f
+
+
+def test_ndpsim_accepts_multi_expansion_trace(unit_db, unit_index):
+    from repro.core import graph as gmod
+    from repro.ndpsim import SimFlags, simulate_ndp
+    from repro.ndpsim.timing import NASZIP_2CH
+
+    out = unit_index.search(unit_db.queries[:16],
+                            dataclasses.replace(PARAMS, expand=4, trace=True))
+    owner = gmod.map_owners(unit_db.n, NASZIP_2CH.n_subchannels, "shuffle")
+    r = simulate_ndp(out, owner, unit_index.graph.base_adjacency, NASZIP_2CH,
+                     SimFlags(), unit_index.dfloat_cfg, unit_index.seg)
+    assert r.qps > 0 and r.dram_bytes_per_query > 0
+
+
+def test_ndpsim_backend_runs_with_default_expand(unit_db, unit_index):
+    res = unit_index.searcher("ndpsim", PARAMS)(unit_db.queries[:8])
+    assert res.sim is not None and res.sim.qps > 0
