@@ -11,8 +11,17 @@ and QPS uses the min-of-N batch time — on a shared/1-core box the minimum is
 the noise-robust estimate of the true cost (timeit-style), and interleaving
 cancels slow drift that would otherwise bias whichever config ran second.
 
+Besides the local-CPU A/B pair the JSON carries one row per execution
+substrate: ``packed_storage`` (the multi-expansion point scored straight from
+the Dfloat bitstream), ``sharded`` (the shard_map DaM backend on this host's
+device mesh), ``ndpsim`` (the DIMM-NDP timing-model projection of the traced
+search) and ``memory`` (f32 vs packed bytes/vector of this index) — so the
+perf trajectory tracks every backend, not just the local hot path.
+
 Dataset defaults to ``sift`` (the paper's headline workload); override with
 ``BENCH_DATASET=unit`` for the CI smoke job (tiny synthetic DB, seconds).
+``BENCH_STORAGE=packed`` switches the interleaved A/B pair itself to
+packed-native scoring (the CI smoke matrix runs once per storage mode).
 """
 from __future__ import annotations
 
@@ -46,15 +55,25 @@ N_REPS = 12            # interleaved QPS reps per config
 N_LAT = 32             # single-query latency samples per config
 
 
+N_SUB_REPS = 4         # lighter min-of-N for the per-substrate rows
+N_NDP_QUERIES = 32     # the ndpsim engine replays hops in Python — keep small
+
+
 def _timed(run, q) -> float:
     t0 = time.perf_counter()
     run(q)
     return time.perf_counter() - t0
 
 
+def _min_qps(run, q, reps: int = N_SUB_REPS) -> float:
+    run(q)                                      # compile
+    return len(q) / min(_timed(run, q) for _ in range(reps))
+
+
 def _stats(idx, db, params: SearchParams, q, qps: float) -> dict:
     """Latency percentiles (single-query calls), recall, trace statistics."""
     run = idx.searcher("local", params)
+    run(q[:1])                                  # compile 1-query shape
     lat_ms = np.sort([_timed(run, q[i : i + 1]) * 1e3
                       for i in range(min(N_LAT, len(q)))])
     out = run(q)
@@ -62,6 +81,7 @@ def _stats(idx, db, params: SearchParams, q, qps: float) -> dict:
     return dict(
         expand=params.expand,
         ef=params.ef,
+        storage=params.storage,
         qps=round(qps, 1),
         p50_latency_ms=round(float(np.percentile(lat_ms, 50)), 3),
         p99_latency_ms=round(float(np.percentile(lat_ms, 99)), 3),
@@ -72,21 +92,61 @@ def _stats(idx, db, params: SearchParams, q, qps: float) -> dict:
     )
 
 
+def _sharded_row(idx, db, params: SearchParams, q) -> dict:
+    import jax
+
+    run = idx.searcher("sharded", params)
+    qps = _min_qps(run, q)
+    out = run(q)
+    return dict(
+        ef=params.ef, expand=params.expand, storage=params.storage,
+        n_shards=len(jax.devices()), qps=round(qps, 1),
+        recall_at_10=round(float(recall_at_k(out.ids, db.gt[: len(q)], 10)), 4),
+    )
+
+
+def _ndpsim_row(idx, db, params: SearchParams, q) -> dict:
+    qs = q[:N_NDP_QUERIES]
+    sim = idx.searcher("ndpsim", params)(qs).sim
+    return dict(
+        ef=params.ef, expand=params.expand, storage=params.storage,
+        n_queries=len(qs), qps=round(sim.qps, 1),
+        avg_latency_us=round(sim.avg_latency_us, 2),
+        dram_bytes_per_query=round(sim.dram_bytes_per_query, 1),
+        energy_uj_per_query=round(sim.energy_uj_per_query, 3),
+        prefetch_hit=round(sim.prefetch_hit, 3),
+    )
+
+
+def _memory_row(idx) -> dict:
+    f32 = 4 * idx.dim
+    packed = 4 * idx.db_packed.shape[1]
+    return dict(
+        f32_bytes_per_vector=f32,
+        packed_bytes_per_vector=packed,
+        compression=round(f32 / max(packed, 1), 2),
+        dfloat_segments=[(s.width, s.n_dims) for s in idx.dfloat_cfg.segments],
+    )
+
+
 def run_json(out_path: str | Path = "BENCH_search.json",
-             dataset: str | None = None) -> dict:
+             dataset: str | None = None, storage: str | None = None) -> dict:
     dataset = dataset or os.environ.get("BENCH_DATASET", "sift")
+    storage = storage or os.environ.get("BENCH_STORAGE", "f32")
     db = make_dataset(dataset)
     tiny = db.n <= 4096
     spec = (IndexSpec.for_db(db, m=8, dfloat_recall_target=None) if tiny
             else IndexSpec.for_db(db, m=16, dfloat_recall_target=0.9,
                                   dfloat_proxy=True))
     idx = Index.build(db, spec, cache_key=dataset)
-    use_dfloat = spec.dfloat_recall_target is not None
+    # packed storage scores the bitstream — the Dfloat (possibly fp32-layout)
+    # quantized view — so it implies use_dfloat
+    use_dfloat = spec.dfloat_recall_target is not None or storage == "packed"
     n_queries = min(N_QUERIES, len(db.queries))
     q = db.queries[:n_queries]
 
     common = dict(k=10, use_fee=True, use_dfloat=use_dfloat,
-                  fee_backend="jnp")
+                  fee_backend="jnp", storage=storage)
     p_base = SearchParams(expand=1, ef=TINY_EF if tiny else BENCH_EF, **common)
     p_multi = SearchParams(expand=DEFAULT_EXPAND,
                            ef=TINY_EF if tiny else MULTI_EF, **common)
@@ -102,6 +162,7 @@ def run_json(out_path: str | Path = "BENCH_search.json",
 
     base = _stats(idx, db, p_base, q, n_queries / best[0])
     multi = _stats(idx, db, p_multi, q, n_queries / best[1])
+    p_packed = dataclasses.replace(p_multi, storage="packed", use_dfloat=True)
 
     result = dict(
         bench="fig15_qps_search",
@@ -112,6 +173,7 @@ def run_json(out_path: str | Path = "BENCH_search.json",
         n_queries=n_queries,
         backend="local",
         fee_backend="jnp",
+        storage=storage,
         fast_mode=FAST,
         platform=dict(machine=platform.machine(),
                       python=platform.python_version()),
@@ -121,13 +183,25 @@ def run_json(out_path: str | Path = "BENCH_search.json",
         hops_reduction=round(base["hops_per_query"]
                              / max(multi["hops_per_query"], 1e-9), 2),
         recall_delta=round(multi["recall_at_10"] - base["recall_at_10"], 4),
+        # one row per execution substrate (same multi-expansion point); when
+        # the A/B pair already ran packed, reuse it instead of re-measuring
+        packed_storage=(multi if storage == "packed" else
+                        _stats(idx, db, p_packed, q,
+                               _min_qps(idx.searcher("local", p_packed), q))),
+        sharded=_sharded_row(idx, db, p_multi, q),
+        ndpsim=_ndpsim_row(idx, db, p_multi, q),
+        memory=_memory_row(idx),
     )
     Path(out_path).write_text(json.dumps(result, indent=1) + "\n")
-    print(f"[bench_search] wrote {out_path}: "
+    print(f"[bench_search] wrote {out_path} (storage={storage}): "
           f"qps {base['qps']} -> {multi['qps']} "
           f"({result['speedup_qps']}x), hops {base['hops_per_query']} -> "
           f"{multi['hops_per_query']} ({result['hops_reduction']}x), "
-          f"recall {base['recall_at_10']} -> {multi['recall_at_10']}")
+          f"recall {base['recall_at_10']} -> {multi['recall_at_10']}; "
+          f"packed qps {result['packed_storage']['qps']}, "
+          f"sharded qps {result['sharded']['qps']}, "
+          f"ndpsim qps {result['ndpsim']['qps']}, "
+          f"{result['memory']['compression']}x bytes/vec")
     return result
 
 

@@ -44,12 +44,17 @@ def main(csv):
                                                n_queries=64)
             n_eval_plain = (out_plain.trace["nbrs"] >= 0).sum() / 64
             hnsw_bytes = n_eval_plain * db.dim * 4
-            # VD-Zip: bursts touched per eval (Dfloat+FEE)
+            # VD-Zip: sub-channel burst groups touched per eval (Dfloat+FEE).
+            # bursts_for_prefix counts per-device 128-bit bursts; the 4
+            # devices stream in lockstep, so bytes = ceil(n_b/dev) * 64B —
+            # the same accounting ndpsim's burst_groups table uses.
             segs = out.trace["segs"]
-            bursts = 0
+            dev = idx.dfloat_cfg.devices_per_subchannel
+            groups = 0
             for s in np.unique(segs[segs > 0]):
-                bursts += (segs == s).sum() * idx.dfloat_cfg.bursts_for_prefix(int(s) * idx.seg)
-            vdzip_bytes = bursts * 64 / 64       # 64B per burst group, per query
+                n_b = idx.dfloat_cfg.bursts_for_prefix(int(s) * idx.seg)
+                groups += (segs == s).sum() * -(-n_b // dev)
+            vdzip_bytes = groups * 64 / 64       # 64B per group; 64 queries
             # RaBitQ-lite: 1-bit scan of evaluated candidates + rerank 3*k
             rq = bl.fit_rabitq(idx.db_rot, db.metric)
             rbq_bytes = n_eval_plain * (db.dim / 8 + 8) + 30 * db.dim * 4

@@ -1,2 +1,2 @@
-"""NasZip core: VD-Zip (FEE-sPCA + Dfloat), graph index, beam search, DaM."""
-from repro.core import baselines, dfloat, fee, graph, pca, search, vdzip  # noqa: F401
+"""NasZip core: FEE-sPCA + Dfloat, graph index, beam search, DaM."""
+from repro.core import baselines, dfloat, fee, graph, pca, search  # noqa: F401

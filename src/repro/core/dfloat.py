@@ -221,6 +221,88 @@ def pack_db(db: np.ndarray, cfg: DfloatConfig) -> np.ndarray:
     return out.astype(np.uint32)
 
 
+def packed_words(cfg: DfloatConfig) -> int:
+    """uint32 words per packed vector under the burst-aligned layout."""
+    return burst_layout(cfg)[1]
+
+
+def feature_positions(cfg: DfloatConfig):
+    """Static (word index, bit offset, segment) of every feature.
+
+    Fields never straddle a 128-bit burst (rule 1), so each feature's position
+    within the packed row is a compile-time constant — this is what lets the
+    packed FEE kernels decode arbitrary feature ranges with static shifts.
+    Returns (positions, total_words).
+    """
+    layout, w_words = burst_layout(cfg)
+    wpb = cfg.burst_bits // 32
+    pos = []
+    for s, word0, nb, per in layout:
+        for j in range(s.n_dims):
+            burst, local = divmod(j, per)
+            bit = local * s.width
+            pos.append((word0 + burst * wpb + (bit >> 5), bit & 31, s))
+    return pos, w_words
+
+
+def decode_field_jnp(fld, n_exp: int, n_man: int, bias: int):
+    """uint32 Dfloat field -> f32, pure jnp (bit-exact vs ``decode_fields``).
+
+    Works on traced values, inside Pallas kernel bodies, and under vmap.
+    e - bias + 127 >= 1 for every valid encoded field, so two's-complement
+    wraparound addition is exact even when bias > 127.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    w = 1 + n_exp + n_man
+    fld = fld.astype(jnp.uint32)
+    sign = (fld >> jnp.uint32(w - 1)) & jnp.uint32(1)
+    e = (fld >> jnp.uint32(n_man)) & jnp.uint32((1 << n_exp) - 1)
+    man = fld & jnp.uint32((1 << n_man) - 1)
+    ebias = jnp.uint32((F32_BIAS - bias) & 0xFFFFFFFF)
+    f32 = (sign << jnp.uint32(31)) \
+        | ((e + ebias) << jnp.uint32(F32_MAN)) \
+        | (man << jnp.uint32(F32_MAN - n_man))
+    f32 = jnp.where(fld == 0, jnp.uint32(0), f32)
+    return jax.lax.bitcast_convert_type(f32, jnp.float32)
+
+
+def decode_burst_quads_jnp(quad, s: DfloatSegment, per: int):
+    """Decode one segment's burst quads (C, nb, words/burst) -> (C, nb*per)
+    f32 with the static per-phase shifts (the one place the layout's
+    phase walk is implemented in jnp — shared by :func:`unpack_rows_jnp` and
+    the Pallas unpack kernel)."""
+    import jax.numpy as jnp
+
+    cols = []
+    for local in range(per):
+        bit = local * s.width
+        wi, ofs = bit >> 5, bit & 31
+        v = quad[:, :, wi] >> jnp.uint32(ofs)
+        if ofs + s.width > 32:
+            v = v | (quad[:, :, wi + 1] << jnp.uint32(32 - ofs))
+        fld = v & jnp.uint32((1 << s.width) - 1)
+        cols.append(decode_field_jnp(fld, s.n_exp, s.n_man, s.bias))
+    return jnp.stack(cols, axis=-1).reshape(quad.shape[0], -1)
+
+
+def unpack_rows_jnp(packed, cfg: DfloatConfig):
+    """Traceable decoder: (C, W) uint32 -> (C, D) f32, bit-exact vs
+    ``unpack_db``.  Usable inside jit/vmap — the hot-path counterpart of the
+    numpy oracle (which stays the test reference)."""
+    import jax.numpy as jnp
+
+    layout, w_words = burst_layout(cfg)
+    wpb = cfg.burst_bits // 32
+    c = packed.shape[0]
+    outs = []
+    for s, word0, nb, per in layout:
+        quad = packed[:, word0 : word0 + nb * wpb].reshape(c, nb, wpb)
+        outs.append(decode_burst_quads_jnp(quad, s, per)[:, : s.n_dims])
+    return jnp.concatenate(outs, axis=1)
+
+
 def unpack_db(packed: np.ndarray, cfg: DfloatConfig) -> np.ndarray:
     """Numpy reference decoder (oracle for the Pallas kernel)."""
     n = packed.shape[0]

@@ -101,12 +101,3 @@ def exact_distance(q, x, *, metric: str = "l2"):
     if metric == "l2":
         return ((x - q[None, :]) ** 2).sum(-1)
     return -(x @ q)
-
-
-def make_fee_params(spca, beta_fit: dict):  # pragma: no cover — shim
-    """Deprecated: use :class:`FeeParams` (``FeeParams.coerce(beta_fit)``)."""
-    import warnings
-
-    warnings.warn("make_fee_params is deprecated; use fee.FeeParams.coerce",
-                  DeprecationWarning, stacklevel=2)
-    return FeeParams.coerce(beta_fit)

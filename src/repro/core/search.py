@@ -20,6 +20,12 @@ is exactly the recall/compute trade the paper's beta corrects.
 ``expand=1`` reproduces the classic one-node-per-hop HNSW loop; larger values
 amortize gather/sort/host cost over ~``expand``x fewer hops at equal recall.
 
+``SearchConfig.storage`` selects the base-vector representation: ``"f32"``
+scores dense float rows (the legacy path), ``"packed"`` scores the Dfloat
+uint32 bitstream directly — rows are gathered packed and decoded inside the
+FEE kernel (``kernels.ops.fee_distance_packed``), bit-identical to scoring
+the ``emulate_db`` f32 view while moving ~3x fewer bytes per gather.
+
 Trace layout (per query): ``node`` is (H, E) — the up-to-``expand`` nodes
 popped per hop (-1 pad) — and ``nbrs``/``segs``/``cand_d``/``src`` are (H, L)
 with L = max(M, E*M/2): the frontier batch after the fresh-first compaction,
@@ -30,20 +36,21 @@ shape-compatible with the legacy (H, M) contract along the last axis.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dfloat as dfl
 from repro.core import fee as fee_mod
 from repro.core.fee import FeeParams
 from repro.kernels import ops as kops
 
 BIG = jnp.float32(3.0e38)
 
-FEE_BACKENDS = ("auto", "jnp", "pallas")
+FEE_BACKENDS = ("auto", "jnp", "pallas", "pallas_skip_dma")
+STORAGES = ("f32", "packed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,7 +62,8 @@ class SearchConfig:
     max_hops: int = 0           # 0 -> auto (4*ef expansions / expand per hop)
     use_fee: bool = False
     expand: int = 4             # beam entries popped per hop (frontier batch)
-    fee_backend: str = "auto"   # kernels.ops dispatch: auto | jnp | pallas
+    fee_backend: str = "auto"   # kernels.ops dispatch: auto | jnp | pallas[...]
+    storage: str = "f32"        # base vectors: dense f32 | packed Dfloat words
 
     def __post_init__(self):
         if self.expand < 1:
@@ -63,6 +71,9 @@ class SearchConfig:
         if self.fee_backend not in FEE_BACKENDS:
             raise ValueError(f"fee_backend={self.fee_backend!r}; expected one "
                              f"of {FEE_BACKENDS}")
+        if self.storage not in STORAGES:
+            raise ValueError(f"storage={self.storage!r}; expected one of "
+                             f"{STORAGES}")
 
     def hops(self):
         """Hop budget for the traced (fixed-length scan) path: the legacy
@@ -134,20 +145,36 @@ def merge_beam(beam_ids, beam_d, expanded, cand_ids, cand_d):
     return beam_ids, beam_d, all_exp[order] | (beam_d >= BIG)
 
 
-def _score(q, tgt, threshold, fee: FeeParams | None, cfg: SearchConfig):
+def _score(q, tgt, threshold, fee: FeeParams | None, cfg: SearchConfig,
+           dfl_cfg: dfl.DfloatConfig | None = None):
     """FEE/exact distances for one gathered frontier batch, routed through the
-    kernel dispatcher (Pallas with DMA skipping on TPU, jnp oracle on CPU)."""
+    kernel dispatcher (Pallas with DMA skipping on TPU, jnp oracle on CPU).
+
+    With ``cfg.storage == "packed"`` the batch ``tgt`` is (L, W) packed uint32
+    rows straight from the bitstream; the fused kernel decodes them on the fly
+    (bit-identical to scoring the ``emulate_db`` f32 view).
+    """
+    packed = cfg.storage == "packed"
+    n_segs = (dfl_cfg.dim if packed else tgt.shape[1]) // cfg.seg
     if cfg.use_fee:
+        if packed:
+            return kops.fee_distance_packed(
+                q, tgt, threshold, fee.alpha, fee.beta, fee.margin,
+                dfloat_cfg=dfl_cfg, seg=cfg.seg, metric=cfg.metric,
+                backend=cfg.fee_backend)
         return kops.fee_distance(q, tgt, threshold, fee.alpha, fee.beta,
                                  fee.margin, seg=cfg.seg, metric=cfg.metric,
                                  backend=cfg.fee_backend)
+    if packed:
+        tgt = kops.dfloat_unpack_rows(tgt, dfl_cfg, backend=cfg.fee_backend)
     score = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
     rejected = jnp.zeros(tgt.shape[0], bool)
-    segs_used = jnp.full((tgt.shape[0],), tgt.shape[1] // cfg.seg, jnp.int32)
+    segs_used = jnp.full((tgt.shape[0],), n_segs, jnp.int32)
     return score, rejected, segs_used
 
 
-def _hop_body(state, vectors, adj, q, fee: FeeParams | None, cfg: SearchConfig):
+def _hop_body(state, vectors, adj, q, fee: FeeParams | None, cfg: SearchConfig,
+              dfl_cfg: dfl.DfloatConfig | None = None):
     beam_ids, beam_d, expanded, visited = state
     ef = beam_ids.shape[0]
     e, m = min(cfg.expand, ef), adj.shape[1]
@@ -181,8 +208,8 @@ def _hop_body(state, vectors, adj, q, fee: FeeParams | None, cfg: SearchConfig):
     visited = visited.at[w].add(jnp.where(fresh, bit, jnp.uint32(0)))
 
     threshold = beam_d[-1]
-    tgt = vectors[safe]                                    # (L, D) gather
-    score, rejected, segs_used = _score(q, tgt, threshold, fee, cfg)
+    tgt = vectors[safe]                          # (L, D) f32 / (L, W) packed
+    score, rejected, segs_used = _score(q, tgt, threshold, fee, cfg, dfl_cfg)
 
     # ---- single top-k beam merge over (ef + L) candidates
     cand_d = jnp.where(fresh & ~rejected, score, BIG)
@@ -201,9 +228,13 @@ def _hop_body(state, vectors, adj, q, fee: FeeParams | None, cfg: SearchConfig):
     return (beam_ids, beam_d, expanded, visited), trace
 
 
-def _init_state(q, entry, vectors, cfg: SearchConfig, n_words):
+def _init_state(q, entry, vectors, cfg: SearchConfig, n_words,
+                dfl_cfg: dfl.DfloatConfig | None = None):
     ef = cfg.ef
-    d0 = fee_mod.exact_distance(q, vectors[entry][None, :], metric=cfg.metric)[0]
+    row = vectors[entry][None, :]
+    if cfg.storage == "packed":
+        row = kops.dfloat_unpack_rows(row, dfl_cfg, backend=cfg.fee_backend)
+    d0 = fee_mod.exact_distance(q, row, metric=cfg.metric)[0]
     beam_ids = jnp.full((ef,), -1, jnp.int32).at[0].set(entry)
     beam_d = jnp.full((ef,), BIG, jnp.float32).at[0].set(d0)
     expanded = jnp.ones((ef,), bool).at[0].set(False)
@@ -212,22 +243,24 @@ def _init_state(q, entry, vectors, cfg: SearchConfig, n_words):
     return beam_ids, beam_d, expanded, visited
 
 
-@partial(jax.jit, static_argnames=("cfg", "trace"))
+@partial(jax.jit, static_argnames=("cfg", "trace", "dfl_cfg"))
 def _search_batch(vectors, adj, fee, queries, entries, *, cfg: SearchConfig,
-                  trace: bool):
+                  trace: bool, dfl_cfg: dfl.DfloatConfig | None = None):
     """Top-level jitted batch search.
 
     ``vectors``/``adj`` are *arguments*, not closure constants, so XLA keys
     the executable on (shapes, cfg, trace): building a second same-shape
     index — or re-creating a searcher — never re-traces or re-lowers.
+    ``vectors`` is the packed (N, W) uint32 bitstream when
+    ``cfg.storage == "packed"`` (``dfl_cfg`` supplies the static layout).
     """
     n_words = -(-vectors.shape[0] // 32)
 
     def search_one(q, entry):
-        state = _init_state(q, entry, vectors, cfg, n_words)
+        state = _init_state(q, entry, vectors, cfg, n_words, dfl_cfg)
         if trace:
             def step(s, _):
-                s, t = _hop_body(s, vectors, adj, q, fee, cfg)
+                s, t = _hop_body(s, vectors, adj, q, fee, cfg, dfl_cfg)
                 return s, t
             state, traces = jax.lax.scan(step, state, None, length=cfg.hops())
         else:
@@ -235,7 +268,7 @@ def _search_batch(vectors, adj, fee, queries, entries, *, cfg: SearchConfig,
                 _, beam_d, expanded, _ = s
                 return ((~expanded) & (beam_d < BIG)).any()
             def body(s):
-                s, _ = _hop_body(s, vectors, adj, q, fee, cfg)
+                s, _ = _hop_body(s, vectors, adj, q, fee, cfg, dfl_cfg)
                 return s
             state = jax.lax.while_loop(cond, body, state)
             traces = None
@@ -251,29 +284,32 @@ def _search_batch(vectors, adj, fee, queries, entries, *, cfg: SearchConfig,
     return jax.vmap(search_one)(queries, entries)
 
 
-def make_searcher(vectors, adj, cfg: SearchConfig, fee: FeeParams | dict | None = None,
-                  trace: bool = False, *, fee_params=None):
+def make_searcher(vectors, adj, cfg: SearchConfig,
+                  fee: FeeParams | dict | None = None, trace: bool = False, *,
+                  dfloat_cfg: dfl.DfloatConfig | None = None):
     """Returns search(queries (Q,D), entries (Q,)) -> dict of results.
 
     vectors/adj may be numpy; they are passed to one shared top-level jitted
-    program (cached by shape), not closed over as constants.
+    program (cached by shape), not closed over as constants.  With
+    ``cfg.storage == "packed"``, ``vectors`` is the (N, W) uint32 Dfloat
+    bitstream and ``dfloat_cfg`` (static, hashable) describes its layout.
     ``fee`` takes a typed :class:`FeeParams`; legacy alpha/beta/margin dicts
-    are coerced (``fee_params=`` is a deprecated alias for that case).
+    are coerced.
     """
-    if fee_params is not None:
-        warnings.warn("make_searcher(fee_params=dict) is deprecated; pass "
-                      "fee=FeeParams(...)", DeprecationWarning, stacklevel=2)
-        fee = fee_params
+    if cfg.storage == "packed" and dfloat_cfg is None:
+        raise ValueError('cfg.storage="packed" requires dfloat_cfg=DfloatConfig')
     vectors = jnp.asarray(vectors)
     adj = jnp.asarray(adj, jnp.int32)
     fp = FeeParams.coerce(fee)
     if cfg.use_fee and fp is None:
         raise ValueError("cfg.use_fee=True requires fee=FeeParams(...) "
                          "(use FeeParams.identity(n_seg) for plain d_part exit)")
+    dfl_cfg = dfloat_cfg if cfg.storage == "packed" else None
 
     def search(queries, entries):
         return _search_batch(vectors, adj, fp, jnp.asarray(queries),
-                             jnp.asarray(entries), cfg=cfg, trace=trace)
+                             jnp.asarray(entries), cfg=cfg, trace=trace,
+                             dfl_cfg=dfl_cfg)
 
     return search
 
@@ -307,14 +343,21 @@ def _greedy_level(vecs_l, adj_l, queries, cur, *, metric: str):
 
 
 def descend_entry(vectors, graph, queries, metric: str) -> np.ndarray:
-    """Greedy top-down routing through HNSW upper layers -> base entry ids."""
+    """Greedy top-down routing through HNSW upper layers -> base entry ids.
+
+    ``vectors`` is either the dense (N, D) f32 array or a callable
+    ``ids -> (len(ids), D) f32`` row provider — the latter lets packed-native
+    indices materialize only the tiny upper-level subsets instead of a full
+    f32 copy of the DB.
+    """
+    fetch = vectors if callable(vectors) else (lambda ids: vectors[ids])
     entries = np.full(len(queries), graph.entry, np.int64)
     queries = jnp.asarray(queries)
     for ids, adj in reversed(graph.levels[1:]):
         # level ids are sorted by construction (graph.build_graph)
         pos = np.clip(np.searchsorted(ids, entries), 0, len(ids) - 1)
         cur = np.where(ids[pos] == entries, pos, 0).astype(np.int32)
-        cur = np.asarray(_greedy_level(jnp.asarray(vectors[ids]),
+        cur = np.asarray(_greedy_level(jnp.asarray(fetch(ids)),
                                        jnp.asarray(adj, jnp.int32),
                                        queries, jnp.asarray(cur), metric=metric))
         entries = ids[cur]
@@ -322,20 +365,26 @@ def descend_entry(vectors, graph, queries, metric: str) -> np.ndarray:
 
 
 def search_graph(vectors, graph, queries, cfg: SearchConfig,
-                 fee: FeeParams | dict | None = None, trace: bool = False) -> dict:
-    """Descend to base entries, run base-layer search; numpy result dict."""
-    entries = descend_entry(vectors, graph, queries, cfg.metric)
+                 fee: FeeParams | dict | None = None, trace: bool = False,
+                 dfloat_cfg: dfl.DfloatConfig | None = None,
+                 descent_vectors=None) -> dict:
+    """Descend to base entries, run base-layer search; numpy result dict.
+
+    With ``cfg.storage == "packed"``, ``vectors`` is the packed bitstream and
+    ``descent_vectors`` (dense array or ``ids -> rows`` callable) supplies the
+    f32 rows the upper-layer greedy descent scores against.
+    """
+    if cfg.storage == "packed":
+        if dfloat_cfg is None:
+            raise ValueError('cfg.storage="packed" requires dfloat_cfg=DfloatConfig')
+        if descent_vectors is None:
+            descent_vectors = lambda ids: dfl.unpack_db(
+                np.asarray(vectors)[ids], dfloat_cfg)
+    else:
+        descent_vectors = vectors if descent_vectors is None else descent_vectors
+    entries = descend_entry(descent_vectors, graph, queries, cfg.metric)
     searcher = make_searcher(vectors, graph.base_adjacency, cfg,
-                             fee=fee, trace=trace)
+                             fee=fee, trace=trace, dfloat_cfg=dfloat_cfg)
     out = searcher(jnp.asarray(queries), jnp.asarray(entries))
     return {k: np.asarray(v) if not isinstance(v, dict) else {kk: np.asarray(vv) for kk, vv in v.items()}
             for k, v in out.items()}
-
-
-def run_search(vecdb_vectors, graph, queries, cfg: SearchConfig,
-               fee_params=None, trace: bool = False):
-    """Deprecated alias for :func:`search_graph`; prefer ``repro.index``."""
-    warnings.warn("run_search is deprecated; use search_graph or the "
-                  "repro.index Index API", DeprecationWarning, stacklevel=2)
-    return search_graph(vecdb_vectors, graph, queries, cfg,
-                        fee=fee_params, trace=trace)

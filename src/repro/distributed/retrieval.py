@@ -21,7 +21,6 @@ negligible false-visit rate at billion scale) so the state is O(1) in DB size.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
 
 import jax
@@ -29,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import dfloat as dfl
 from repro.core import fee as fee_mod
 from repro.core import search as search_mod
 from repro.core.fee import FeeParams
@@ -66,18 +66,26 @@ def abstract_db(n: int, d: int, n_shards: int, m_part: int, dtype=jnp.float32) -
     )
 
 
-def build_sharded_db(vectors: np.ndarray, dam, dtype=jnp.float32) -> ShardedDB:
-    """Pack a core.graph.DaMPartition into the stacked device layout."""
+def build_sharded_db(vectors: np.ndarray, dam, dtype=None) -> ShardedDB:
+    """Pack a core.graph.DaMPartition into the stacked device layout.
+
+    ``vectors`` may be the dense float rows or the packed uint32 bitstream
+    (row layout is identical either way); by default integer inputs keep
+    their dtype and float inputs are cast to f32 (the pre-packed guarantee).
+    """
     c = dam.n_channels
     n_loc = max(len(ids) for ids in dam.local_ids)
     d = vectors.shape[1]
-    vs = np.zeros((c, n_loc, d), np.float32)
+    if dtype is None:
+        dtype = (vectors.dtype if np.issubdtype(vectors.dtype, np.integer)
+                 else np.float32)
+    vs = np.zeros((c, n_loc, d), dtype)
     ids = np.full((c, n_loc), -1, np.int32)
     for ch, gl in enumerate(dam.local_ids):
         vs[ch, : len(gl)] = vectors[gl]
         ids[ch, : len(gl)] = gl
     pa = np.stack(dam.part_adj)  # (C, N, Mc)
-    return ShardedDB(jnp.asarray(vs, dtype), jnp.asarray(ids), jnp.asarray(pa))
+    return ShardedDB(jnp.asarray(vs), jnp.asarray(ids), jnp.asarray(pa))
 
 
 def db_shardings(mesh: Mesh):
@@ -91,21 +99,24 @@ def db_shardings(mesh: Mesh):
 
 def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
                           fee: FeeParams | dict | None = None,
-                          n_bits_log2: int = 23, *, fee_params=None):
+                          n_bits_log2: int = 23, *,
+                          dfloat_cfg: dfl.DfloatConfig | None = None):
     """Returns search(db: ShardedDB, queries (Q, d), entries (Q,)) — a jit'd
     shard_map program for ``mesh`` (axes: optional pod, data, model).
 
-    ``fee`` takes a typed :class:`FeeParams`; ``fee_params=`` dicts are a
-    deprecated alias."""
-    if fee_params is not None:
-        warnings.warn("make_sharded_searcher(fee_params=dict) is deprecated; "
-                      "pass fee=FeeParams(...)", DeprecationWarning, stacklevel=2)
-        fee = fee_params
+    ``fee`` takes a typed :class:`FeeParams`.  With
+    ``cfg.storage == "packed"`` the ShardedDB holds packed uint32 rows and
+    each shard scores its local partition straight from the bitstream
+    (``dfloat_cfg`` supplies the static layout) — one shard's HBM slice holds
+    ~3x more vectors than the f32 layout."""
     model_axis = "model" if "model" in mesh.axis_names else mesh.axis_names[-1]
     data_axes = tuple(n for n in mesh.axis_names if n != model_axis)
     fp = FeeParams.coerce(fee)
     if cfg.use_fee and fp is None:
         raise ValueError("cfg.use_fee=True requires fee=FeeParams(...)")
+    packed = cfg.storage == "packed"
+    if packed and dfloat_cfg is None:
+        raise ValueError('cfg.storage="packed" requires dfloat_cfg=DfloatConfig')
     n_bits = min(1 << n_bits_log2, 1 << int(np.ceil(np.log2(max(n_total, 2)))))
     n_words = n_bits // 32
     mask_bits = n_bits - 1
@@ -130,15 +141,36 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
         seen = (visited[w] & bit) != 0
         fresh = valid & ~seen & first_occurrence_mask(gids, valid)
 
+        # ---- fresh-first compaction (expand > 1): the stale/dup lanes are
+        # dropped *before* the local gather+scoring and — more importantly at
+        # high shard counts — before the cross-shard all_gather, shrinking the
+        # per-hop collective payload from E*Mc to L = max(Mc, E*Mc/2) lanes
+        # per shard.  Same stable top_k partition (and the same recall
+        # argument for dropped overflow) as the local path.
+        if e > 1:
+            l = max(mc, (e * mc) // 2)
+            _, keep = jax.lax.top_k(fresh.astype(jnp.float32), l)
+            slots, gids, fresh = slots[keep], gids[keep], fresh[keep]
+        gids = jnp.where(fresh, gids, -1)
+
         threshold = beam_d[-1]
-        tgt = vec_loc[jnp.maximum(slots, 0)]            # (E*Mc, d) local gather
+        tgt = vec_loc[jnp.maximum(slots, 0)]   # (L, d) / (L, W) local gather
         if cfg.use_fee:
-            score, rejected, _segs = kops.fee_distance(
-                q, tgt, threshold, fp.alpha, fp.beta, fp.margin,
-                seg=cfg.seg, metric=cfg.metric, backend=cfg.fee_backend)
+            if packed:
+                score, rejected, _segs = kops.fee_distance_packed(
+                    q, tgt, threshold, fp.alpha, fp.beta, fp.margin,
+                    dfloat_cfg=dfloat_cfg, seg=cfg.seg, metric=cfg.metric,
+                    backend=cfg.fee_backend)
+            else:
+                score, rejected, _segs = kops.fee_distance(
+                    q, tgt, threshold, fp.alpha, fp.beta, fp.margin,
+                    seg=cfg.seg, metric=cfg.metric, backend=cfg.fee_backend)
         else:
+            if packed:
+                tgt = kops.dfloat_unpack_rows(tgt, dfloat_cfg,
+                                              backend=cfg.fee_backend)
             score = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
-            rejected = jnp.zeros_like(valid)
+            rejected = jnp.zeros(tgt.shape[0], bool)
         cand_d = jnp.where(fresh & ~rejected, score, BIG)
 
         # ---- the tiny merge: all_gather (id, dist) pairs over the DB axis
@@ -180,11 +212,17 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
         return state[0][: cfg.k], state[1][: cfg.k]
 
     def _entry_vec(vec_loc, ids_loc, entry):
-        """Entry vector lives on one shard; fetch via masked psum (tiny)."""
-        n_loc = vec_loc.shape[0]
+        """Entry vector lives on one shard; fetch via masked psum (tiny).
+
+        Packed rows are decoded locally before the collective, so only one
+        shard contributes a non-zero f32 row either way."""
         slot = jnp.argmax(ids_loc == entry)
         mine = (ids_loc[slot] == entry)
-        v = jnp.where(mine, vec_loc[slot], 0.0)
+        row = vec_loc[slot]
+        if packed:
+            row = kops.dfloat_unpack_rows(row[None], dfloat_cfg,
+                                          backend=cfg.fee_backend)[0]
+        v = jnp.where(mine, row, 0.0)
         return jax.lax.psum(v, model_axis)[None]
 
     def body(vectors, local_ids, part_adj, queries, entries):

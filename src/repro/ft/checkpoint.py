@@ -66,8 +66,14 @@ def latest_step(base_dir: str | Path) -> int | None:
         return None
     steps = []
     for d in base.iterdir():
-        if d.is_dir() and d.name.startswith("step_") and (d / "manifest.json").exists():
-            steps.append(int(d.name.split("_")[1]))
+        # a crash can leave a half-written ``step_N.tmp`` behind (the writer
+        # renames it into place only on completion) — never resume from one
+        if not (d.is_dir() and d.name.startswith("step_")
+                and (d / "manifest.json").exists()):
+            continue
+        suffix = d.name.split("_", 1)[1]
+        if suffix.isdigit():
+            steps.append(int(suffix))
     return max(steps) if steps else None
 
 

@@ -11,12 +11,18 @@ signature; only construction-time options differ:
 Queries are always *raw* (un-rotated) vectors; each backend applies the
 index's sPCA transform and hierarchy descent itself.
 
-``SearchParams.expand`` (multi-expansion frontier batching) and
-``SearchParams.fee_backend`` (FEE kernel dispatch) thread through
-``SearchParams.to_config`` into every backend: the local jit/vmap loop, the
-sharded DaM hop (where popping ``expand`` nodes per hop amortizes the
-cross-shard all-gather), and the traced search that feeds the ndpsim engine
-(which consumes per-hop multi-node traces).
+``SearchParams.expand`` (multi-expansion frontier batching),
+``SearchParams.fee_backend`` (FEE kernel dispatch) and
+``SearchParams.storage`` (dense f32 rows vs the packed Dfloat bitstream)
+thread through ``SearchParams.to_config`` into every backend: the local
+jit/vmap loop, the sharded DaM hop (where popping ``expand`` nodes per hop
+amortizes the cross-shard all-gather and packed shards hold ~3x more vectors
+per device), and the traced search that feeds the ndpsim engine (which
+consumes per-hop multi-node traces).
+
+With ``storage="packed"`` the hierarchy-descent stage still scores f32 rows,
+but only the tiny upper-level subsets are ever emulated — the full ``db_q``
+array is never materialized on host or device.
 """
 from __future__ import annotations
 
@@ -43,7 +49,36 @@ def make(index, backend: str, params: SearchParams, **opts):
 
 
 def _base_vectors(index, params: SearchParams) -> np.ndarray:
+    """Host array the chosen storage mode scores against."""
+    if params.storage == "packed":
+        return index.db_packed
     return index.db_q if params.use_dfloat else index.db_rot
+
+
+def _descent_rows(index, params: SearchParams):
+    """f32 row provider for the upper-layer greedy descent.
+
+    Descent touches only the tiny upper-level subsets, so the packed path
+    emulates just those rows instead of materializing a full f32 DB copy —
+    and memoizes them per level (the fetched rows depend only on the fixed
+    level ids, not the queries), so repeated ``run()`` calls don't re-emulate."""
+    if params.use_dfloat:
+        if params.storage == "packed":
+            cache = {}  # id(level_ids) -> rows; graph.levels arrays are fixed
+
+            def rows(ids):
+                key = id(ids)
+                if key not in cache:
+                    cache[key] = index.emulated_rows(ids)
+                return cache[key]
+
+            return rows
+        return index.emulated_rows
+    return lambda ids: index.db_rot[ids]
+
+
+def _dfloat_cfg(index, params: SearchParams):
+    return index.dfloat_cfg if params.storage == "packed" else None
 
 
 def _fee(index, params: SearchParams, fee=None) -> FeeParams | None:
@@ -58,16 +93,16 @@ def local_searcher(index, params: SearchParams, *, fee=None):
     index-level cache, so searchers for different params share one copy."""
     import jax.numpy as jnp
 
-    vectors = _base_vectors(index, params)
     cfg = params.to_config(index.metric, index.seg)
-    searcher = search_mod.make_searcher(index.device_db(params.use_dfloat),
-                                        index.device_adjacency(),
-                                        cfg, fee=_fee(index, params, fee),
-                                        trace=params.trace)
+    searcher = search_mod.make_searcher(
+        index.device_db(params.use_dfloat, params.storage),
+        index.device_adjacency(), cfg, fee=_fee(index, params, fee),
+        trace=params.trace, dfloat_cfg=_dfloat_cfg(index, params))
+    rows = _descent_rows(index, params)
 
     def run(queries) -> SearchResult:
         qr = index.transform_queries(np.asarray(queries))
-        entries = search_mod.descend_entry(vectors, index.graph, qr, index.metric)
+        entries = search_mod.descend_entry(rows, index.graph, qr, index.metric)
         return SearchResult.from_raw(searcher(jnp.asarray(qr),
                                               jnp.asarray(entries)))
 
@@ -108,15 +143,17 @@ def sharded_searcher(index, params: SearchParams, *, mesh=None,
     with compat.set_mesh(mesh):
         searcher = rt.make_sharded_searcher(mesh, cfg, index.n,
                                             fee=_fee(index, params, fee),
-                                            n_bits_log2=n_bits_log2)
+                                            n_bits_log2=n_bits_log2,
+                                            dfloat_cfg=_dfloat_cfg(index, params))
         sh = rt.db_shardings(mesh)
         sdb = rt.build_sharded_db(vectors, dam)
         sdb = rt.ShardedDB(*(jax.device_put(getattr(sdb, f), getattr(sh, f))
                              for f in ("vectors", "local_ids", "part_adj")))
+    rows = _descent_rows(index, params)
 
     def run(queries) -> SearchResult:
         qr = index.transform_queries(np.asarray(queries))
-        entries = search_mod.descend_entry(vectors, index.graph, qr, index.metric)
+        entries = search_mod.descend_entry(rows, index.graph, qr, index.metric)
         with compat.set_mesh(mesh):
             ids, dists = searcher(sdb, jnp.asarray(qr), jnp.asarray(entries))
         return SearchResult(ids=np.asarray(ids), dists=np.asarray(dists))

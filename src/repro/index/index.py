@@ -8,10 +8,17 @@ Online (Fig. 6 lower):  hierarchy descent -> FEE-sPCA beam search, executed by
 any of the pluggable backends (``local`` jit/vmap, ``sharded`` shard_map DaM,
 ``ndpsim`` timing model) behind one ``searcher(backend=...)`` call.
 
+Storage model (packed-native, format v2): the burst-aligned Dfloat bitstream
+``db_packed`` is the canonical index payload.  The f32 quantized view ``db_q``
+is *derived* — reconstructed on demand via ``dfloat.emulate_db`` (bit-identical
+to decoding the bitstream) and cached; it is no longer persisted, which cuts
+the on-disk artifact and the host/device footprint by the full f32 copy.
+
 Persistence: ``Index.save(path)`` writes ``<path>/spec.json`` (build spec +
 Dfloat layout + graph metadata) and ``<path>/arrays.npz`` (rotation, fee fit,
-graph levels, rotated/quantized/packed DB); ``Index.load(path)`` restores a
-bit-identical index.
+graph levels, rotated/packed DB); ``Index.load(path)`` restores a
+bit-identical index, and still accepts format-v1 artifacts that carried the
+redundant ``db_q`` copy.
 """
 from __future__ import annotations
 
@@ -30,12 +37,18 @@ from repro.data.synthetic import VecDB, exact_topk, recall_at_k
 from repro.index import backends as backends_mod
 from repro.index.types import FeeFit, IndexSpec, SearchParams, SearchResult
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2          # v2 dropped the persisted db_q copy
+KNOWN_FORMATS = (1, 2)
 
 
 @dataclasses.dataclass
 class Index:
-    """A built naszip index: spec + all offline artifacts."""
+    """A built naszip index: spec + all offline artifacts.
+
+    ``db_packed`` (the burst-aligned uint32 bitstream) is the canonical
+    payload; the quantized f32 view is available as the derived ``db_q``
+    property (reconstructed lazily, cached).
+    """
 
     spec: IndexSpec
     spca: pca_mod.SPCA
@@ -43,9 +56,10 @@ class Index:
     dfloat_cfg: dfl.DfloatConfig
     graph: graph_mod.GraphIndex
     db_rot: np.ndarray            # PCA-rotated DB (f32, pre-quantization)
-    db_q: np.ndarray              # Dfloat-emulated rotated DB (what HW sees)
-    db_packed: np.ndarray         # real bitstream (uint32)
+    db_packed: np.ndarray         # real bitstream (uint32) — canonical payload
     timings: dict = dataclasses.field(default_factory=dict)
+    _db_q: np.ndarray | None = dataclasses.field(default=None, repr=False,
+                                                 compare=False)
     _searchers: dict = dataclasses.field(default_factory=dict, repr=False,
                                          compare=False)
     _device: dict = dataclasses.field(default_factory=dict, repr=False,
@@ -73,15 +87,38 @@ class Index:
     def transform_queries(self, q: np.ndarray) -> np.ndarray:
         return self.spca.transform(q)
 
-    def device_db(self, use_dfloat: bool = True):
-        """Device copy of the (quantized) DB, shared by every cached searcher
-        so repeated ``searcher()`` calls don't re-upload the vectors."""
+    @property
+    def db_q(self) -> np.ndarray:
+        """Derived f32 view of the quantized DB (what the hardware decodes).
+
+        Reconstructed on demand from ``db_rot`` + the Dfloat layout — identical
+        bit-for-bit to decoding ``db_packed`` — and cached.  Packed-storage
+        searches never materialize it."""
+        if self._db_q is None:
+            self._db_q = dfl.emulate_db(self.db_rot, self.dfloat_cfg)
+        return self._db_q
+
+    def emulated_rows(self, ids: np.ndarray) -> np.ndarray:
+        """Quantized f32 rows for ``ids`` without materializing full ``db_q``
+        (per-row emulation; used by the upper-layer greedy descent)."""
+        if self._db_q is not None:
+            return self._db_q[ids]
+        return dfl.emulate_db(self.db_rot[ids], self.dfloat_cfg)
+
+    def device_db(self, use_dfloat: bool = True, storage: str = "f32"):
+        """Device copy of the DB in the requested representation, shared by
+        every cached searcher so repeated ``searcher()`` calls don't re-upload
+        the vectors.  ``storage="packed"`` uploads the uint32 bitstream
+        (~3x smaller than the f32 view for typical Dfloat configs)."""
         import jax.numpy as jnp
 
-        key = ("db", bool(use_dfloat))
+        key = ("db", storage, bool(use_dfloat))
         if key not in self._device:
-            self._device[key] = jnp.asarray(self.db_q if use_dfloat
-                                            else self.db_rot)
+            if storage == "packed":
+                arr = self.db_packed
+            else:
+                arr = self.db_q if use_dfloat else self.db_rot
+            self._device[key] = jnp.asarray(arr)
         return self._device[key]
 
     def device_adjacency(self):
@@ -159,13 +196,11 @@ class Index:
                                                  spec.dfloat_recall_target)
         else:
             dfloat_cfg = dfl.fp32_config(d)
-        db_q = dfl.emulate_db(db_rot, dfloat_cfg)
         db_packed = dfl.pack_db(db_rot, dfloat_cfg)
         t["dfloat_search_s"] = time.perf_counter() - t0
 
         return cls(spec=spec, spca=spca, fee=fee, dfloat_cfg=dfloat_cfg,
-                   graph=graph, db_rot=db_rot, db_q=db_q, db_packed=db_packed,
-                   timings=t)
+                   graph=graph, db_rot=db_rot, db_packed=db_packed, timings=t)
 
     # -- persistence --------------------------------------------------------
     def save(self, path: str | Path) -> Path:
@@ -192,7 +227,9 @@ class Index:
             spca_eigvals=self.spca.eigvals,
             fee_alpha=self.fee.alpha, fee_beta=self.fee.beta,
             fee_margin=self.fee.margin, fee_var_k=self.fee.var_k,
-            db_rot=self.db_rot, db_q=self.db_q, db_packed=self.db_packed,
+            # db_q is NOT persisted (format v2): it is derived, bit-exactly,
+            # from db_rot + the Dfloat layout (or by decoding db_packed)
+            db_rot=self.db_rot, db_packed=self.db_packed,
         )
         for i, (ids, adj) in enumerate(self.graph.levels):
             arrays[f"g_ids{i}"] = ids
@@ -204,7 +241,7 @@ class Index:
     def load(cls, path: str | Path) -> "Index":
         path = Path(path)
         meta = json.loads((path / "spec.json").read_text())
-        if meta["format_version"] != FORMAT_VERSION:
+        if meta["format_version"] not in KNOWN_FORMATS:
             raise ValueError(f"unsupported index format {meta['format_version']}")
         spec = IndexSpec(**meta["spec"])
         with np.load(path / "arrays.npz", allow_pickle=False) as z:
@@ -227,8 +264,10 @@ class Index:
                                      entry=int(meta["graph"]["entry"]),
                                      m=int(meta["graph"]["m"]))
         return cls(spec=spec, spca=spca, fee=fee, dfloat_cfg=dfloat_cfg,
-                   graph=graph, db_rot=a["db_rot"], db_q=a["db_q"],
-                   db_packed=a["db_packed"], timings=meta.get("timings", {}))
+                   graph=graph, db_rot=a["db_rot"], db_packed=a["db_packed"],
+                   timings=meta.get("timings", {}),
+                   # v1 artifacts carried the derived copy; seed the cache
+                   _db_q=a.get("db_q"))
 
     # -- search -------------------------------------------------------------
     def searcher(self, backend: str = "local",

@@ -67,12 +67,21 @@ class SearchParams:
     trace: bool = False        # emit per-hop traces (fixed expansion budget)
     max_hops: int = 0          # 0 -> auto (4*ef expansions) when tracing
     expand: int = 4            # beam entries popped per hop (1 = classic HNSW)
-    fee_backend: str = "auto"  # FEE kernel dispatch: auto | jnp | pallas
+    fee_backend: str = "auto"  # FEE kernel dispatch: auto | jnp | pallas[...]
+    storage: str = "f32"       # score dense f32 rows | the packed bitstream
+                               # ("packed" decodes Dfloat words in-kernel;
+                               #  ids are bit-identical to f32-over-db_q)
+
+    def __post_init__(self):
+        if self.storage == "packed" and not self.use_dfloat:
+            raise ValueError('storage="packed" scores the Dfloat bitstream; '
+                             "it requires use_dfloat=True")
 
     def to_config(self, metric: str, seg: int) -> SearchConfig:
         return SearchConfig(ef=self.ef, k=self.k, metric=metric, seg=seg,
                             max_hops=self.max_hops, use_fee=self.use_fee,
-                            expand=self.expand, fee_backend=self.fee_backend)
+                            expand=self.expand, fee_backend=self.fee_backend,
+                            storage=self.storage)
 
 
 @dataclasses.dataclass

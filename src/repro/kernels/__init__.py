@@ -1,9 +1,15 @@
 """Pallas TPU kernels for NasZip's compute hot-spots.
 
-fee_distance   — the VPE: feature-block-streamed distance with FEE-sPCA
-                 early exit (paper Fig. 10c/f adapted to VMEM streaming).
-dfloat_unpack  — the Dfloat process module: static-phase bitstream decode
-                 (paper Fig. 10d adapted from barrel shifter to VPU shifts).
+fee_distance        — the VPE: feature-block-streamed distance with FEE-sPCA
+                      early exit (paper Fig. 10c/f adapted to VMEM streaming);
+                      plus a manual-DMA ``skip_dma`` variant where exited
+                      tiles skip the HBM fetches themselves.
+fee_distance_packed — the Dfloat process module fused into the VPE: packed
+                      uint32 rows decoded in VMEM with static shifter
+                      offsets, FEE-accumulated block by block (the
+                      packed-native scoring hot path; also has skip_dma).
+dfloat_unpack       — standalone bitstream decode (paper Fig. 10d adapted
+                      from barrel shifter to VPU shifts).
 
 Each kernel ships with a pure-jnp/numpy oracle in ref.py and a jit'd wrapper
 in ops.py; tests sweep shapes/dtypes and assert allclose/bit-exactness.

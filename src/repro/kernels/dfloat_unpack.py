@@ -21,24 +21,6 @@ from jax.experimental import pallas as pl
 
 from repro.core import dfloat as dfl
 
-F32_MAN = 23
-F32_BIAS = 127
-
-
-def _decode_u32(fld, n_exp, n_man, bias):
-    """uint32 field -> f32 (valid encoded fields only; see dfloat.decode_fields)."""
-    w = 1 + n_exp + n_man
-    sign = (fld >> jnp.uint32(w - 1)) & jnp.uint32(1)
-    e = (fld >> jnp.uint32(n_man)) & jnp.uint32((1 << n_exp) - 1)
-    man = fld & jnp.uint32((1 << n_man) - 1)
-    # e - bias + 127 >= 1 for every valid encoded field, so two's-complement
-    # wraparound addition is exact even when bias > 127
-    ebias = jnp.uint32((F32_BIAS - bias) & 0xFFFFFFFF)
-    f32 = (sign << jnp.uint32(31)) \
-        | ((e + ebias) << jnp.uint32(F32_MAN)) \
-        | (man << jnp.uint32(F32_MAN - n_man))
-    f32 = jnp.where(fld == 0, jnp.uint32(0), f32)
-    return jax.lax.bitcast_convert_type(f32, jnp.float32)
 
 
 def _kernel(p_ref, out_ref, *, layout, wpb, dim):
@@ -46,16 +28,7 @@ def _kernel(p_ref, out_ref, *, layout, wpb, dim):
     tile_c = packed.shape[0]
     for s, word0, nb, per in layout:
         quad = packed[:, word0 : word0 + nb * wpb].reshape(tile_c, nb, wpb)
-        cols = []
-        for local in range(per):
-            bit = local * s.width
-            wi, ofs = bit >> 5, bit & 31
-            v = quad[:, :, wi] >> jnp.uint32(ofs)
-            if ofs + s.width > 32:
-                v = v | (quad[:, :, wi + 1] << jnp.uint32(32 - ofs))
-            fld = v & jnp.uint32((1 << s.width) - 1)
-            cols.append(_decode_u32(fld, s.n_exp, s.n_man, s.bias))
-        vals = jnp.stack(cols, axis=-1).reshape(tile_c, nb * per)
+        vals = dfl.decode_burst_quads_jnp(quad, s, per)
         out_ref[:, s.start : s.start + s.n_dims] = vals[:, : s.n_dims]
 
 

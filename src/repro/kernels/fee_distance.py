@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: FEE-sPCA early-exit distance (the VPE datapath, Fig. 10c/f).
+"""Pallas TPU kernels: FEE-sPCA early-exit distance (the VPE datapath, Fig. 10c/f).
 
 TPU adaptation of the paper's per-burst early exit: candidates are tiled
 (TILE_C per grid row) and the feature axis is streamed through VMEM in
@@ -9,11 +9,23 @@ After each block the estimated full distance
 
 is compared against the beam threshold; lanes that exit stop accumulating,
 and once an entire candidate tile has exited the remaining feature blocks'
-*compute* is skipped (`pl.when`).  The DMA-skipping variant (manual async
-copies gated on the tile-exit flag — skipping the HBM traffic itself, which is
-the paper's actual win) lives in ``ops.fee_distance`` behind
-``skip_dma=True``; see EXPERIMENTS.md §Perf for the measured difference in
-bytes touched.
+*compute* is skipped (`pl.when`).
+
+Three variants share the accumulate/exit logic:
+
+  * ``fee_distance_pallas``        — f32 features, automatic block pipelining
+    (exited tiles skip compute, but the BlockSpec pipeline still streams
+    their remaining feature blocks from HBM);
+  * ``fee_distance_skipdma_pallas``— f32 features kept in HBM (`pl.ANY`); each
+    feature block is fetched with a manual ``make_async_copy`` gated on the
+    tile-exit flag, so exited tiles skip the HBM traffic itself — the paper's
+    actual win (the DIMM stops issuing bursts on exit);
+  * ``fee_distance_packed_pallas`` — the Dfloat process module fused into the
+    VPE datapath (Fig. 10d->10c): candidates arrive as the packed uint32
+    bitstream and are decoded in VMEM with static barrel-shifter offsets, so
+    only packed bytes ever cross HBM.  ``skip_dma=True`` additionally keeps
+    the bitstream in HBM and manually DMAs only the burst-aligned word range
+    of each live feature block.
 
 Grid: (C // TILE_C, S) with the segment axis sequential ("arbitrary") so the
 accumulator scratch persists across feature blocks of one candidate tile.
@@ -27,6 +39,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import dfloat as dfl
+
 BIG = 3.0e38
 
 
@@ -38,41 +52,54 @@ def _compiler_params_cls():
     raise RuntimeError("unsupported jax/pallas version: no TPU CompilerParams")
 
 
-def _kernel(q_ref, x_ref, thr_ref, alpha_ref, beta_ref, margin_ref,
-            dist_ref, rej_ref, segs_ref,
-            acc, alive, nseg, *, metric: str, n_segs: int, last_valid_seg: int):
-    s = pl.program_id(1)
-
+def _init_scratch(s, acc, alive, nseg):
     @pl.when(s == 0)
     def _init():
         acc[:] = jnp.zeros_like(acc)
         alive[:] = jnp.ones_like(alive)
         nseg[:] = jnp.zeros_like(nseg)
 
-    tile_alive = alive[:].max() > 0
 
-    @pl.when(tile_alive)
-    def _compute():
-        x = x_ref[:, :]                       # (TILE_C, seg)
-        q = q_ref[:, :]                       # (1, seg)
-        if metric == "l2":
-            part = ((x - q) ** 2).sum(axis=1, keepdims=True)   # (TILE_C, 1)
-        else:
-            part = -(x * q).sum(axis=1, keepdims=True)
-        live = alive[:] > 0
-        acc[:] = acc[:] + jnp.where(live, part, 0.0)
-        nseg[:] = nseg[:] + jnp.where(live, 1, 0)
-        est = alpha_ref[s] * acc[:] / beta_ref[s] - margin_ref[s]
-        # exits only before the last segment (paper Fig. 6: at the last access
-        # the full distance is available anyway)
-        exit_now = live & (est >= thr_ref[0]) & (s < last_valid_seg)
-        alive[:] = jnp.where(exit_now, 0, alive[:])
+def _part_distance(x, q, metric: str):
+    if metric == "l2":
+        return ((x - q) ** 2).sum(axis=1, keepdims=True)       # (TILE_C, 1)
+    return -(x * q).sum(axis=1, keepdims=True)
 
+
+def _accumulate_exit(part, s, thr_ref, alpha_ref, beta_ref, margin_ref,
+                     acc, alive, nseg, last_valid_seg: int):
+    live = alive[:] > 0
+    acc[:] = acc[:] + jnp.where(live, part, 0.0)
+    nseg[:] = nseg[:] + jnp.where(live, 1, 0)
+    est = alpha_ref[s] * acc[:] / beta_ref[s] - margin_ref[s]
+    # exits only before the last segment (paper Fig. 6: at the last access
+    # the full distance is available anyway)
+    exit_now = live & (est >= thr_ref[0]) & (s < last_valid_seg)
+    alive[:] = jnp.where(exit_now, 0, alive[:])
+
+
+def _emit_outputs(s, dist_ref, rej_ref, segs_ref, acc, alive, nseg,
+                  n_segs: int):
     @pl.when(s == n_segs - 1)
     def _emit():
         dist_ref[:, :] = acc[:]
         rej_ref[:, :] = jnp.where(alive[:] > 0, 0, 1).astype(jnp.int32)
         segs_ref[:, :] = nseg[:]
+
+
+def _kernel(q_ref, x_ref, thr_ref, alpha_ref, beta_ref, margin_ref,
+            dist_ref, rej_ref, segs_ref,
+            acc, alive, nseg, *, metric: str, n_segs: int, last_valid_seg: int):
+    s = pl.program_id(1)
+    _init_scratch(s, acc, alive, nseg)
+
+    @pl.when(alive[:].max() > 0)
+    def _compute():
+        part = _part_distance(x_ref[:, :], q_ref[:, :], metric)
+        _accumulate_exit(part, s, thr_ref, alpha_ref, beta_ref, margin_ref,
+                         acc, alive, nseg, last_valid_seg)
+
+    _emit_outputs(s, dist_ref, rej_ref, segs_ref, acc, alive, nseg, n_segs)
 
 
 @functools.partial(jax.jit, static_argnames=("seg", "metric", "tile_c", "interpret"))
@@ -129,5 +156,254 @@ def fee_distance_pallas(q, x, threshold, alpha, beta, margin, *,
         ),
         interpret=interpret,
     )(q2, x, thr, alpha.astype(jnp.float32), beta.astype(jnp.float32),
+      margin.astype(jnp.float32))
+    return dist[:c, 0], rej[:c, 0].astype(bool), segs[:c, 0]
+
+
+# ---------------------------------------------------------------------------
+# manual-DMA variant: exited tiles skip the HBM fetch, not just the compute
+# ---------------------------------------------------------------------------
+
+
+def _skipdma_kernel(q_ref, x_hbm, thr_ref, alpha_ref, beta_ref, margin_ref,
+                    dist_ref, rej_ref, segs_ref,
+                    acc, alive, nseg, buf, sem,
+                    *, metric: str, n_segs: int, last_valid_seg: int,
+                    seg: int, tile_c: int):
+    i, s = pl.program_id(0), pl.program_id(1)
+    _init_scratch(s, acc, alive, nseg)
+
+    @pl.when(alive[:].max() > 0)
+    def _fetch_compute():
+        # the burst stream for this feature block is issued only while the
+        # tile is live — this is the skip_dma contract
+        dma = pltpu.make_async_copy(
+            x_hbm.at[pl.ds(i * tile_c, tile_c), pl.ds(s * seg, seg)], buf, sem)
+        dma.start()
+        dma.wait()
+        part = _part_distance(buf[:, :], q_ref[:, :], metric)
+        _accumulate_exit(part, s, thr_ref, alpha_ref, beta_ref, margin_ref,
+                         acc, alive, nseg, last_valid_seg)
+
+    _emit_outputs(s, dist_ref, rej_ref, segs_ref, acc, alive, nseg, n_segs)
+
+
+@functools.partial(jax.jit, static_argnames=("seg", "metric", "tile_c", "interpret"))
+def fee_distance_skipdma_pallas(q, x, threshold, alpha, beta, margin, *,
+                                seg: int, metric: str = "l2", tile_c: int = 128,
+                                interpret: bool = True):
+    """Same contract as :func:`fee_distance_pallas`, but ``x`` stays in HBM and
+    feature blocks are fetched with manual async copies gated on the tile-exit
+    flag: a fully-exited tile stops issuing DMAs, so the remaining bursts are
+    never read (the ``skip_dma`` open item from kernels/ROADMAP)."""
+    c, d = x.shape
+    n_segs = d // seg
+    assert n_segs * seg == d, (d, seg)
+    pad_c = (-c) % tile_c
+    if pad_c:
+        x = jnp.pad(x, ((0, pad_c), (0, 0)))
+    cp = c + pad_c
+    q2 = q.reshape(1, d)
+    thr = jnp.reshape(threshold, (1,)).astype(jnp.float32)
+
+    kern = functools.partial(_skipdma_kernel, metric=metric, n_segs=n_segs,
+                             last_valid_seg=n_segs - 1, seg=seg, tile_c=tile_c)
+    dist, rej, segs = pl.pallas_call(
+        kern,
+        grid=(cp // tile_c, n_segs),
+        in_specs=[
+            pl.BlockSpec((1, seg), lambda i, s: (0, s)),            # q
+            pl.BlockSpec(memory_space=pltpu.ANY),                   # x (HBM)
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # threshold
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # alpha
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # beta
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # margin
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_c, 1), lambda i, s: (i, 0)),
+            pl.BlockSpec((tile_c, 1), lambda i, s: (i, 0)),
+            pl.BlockSpec((tile_c, 1), lambda i, s: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((cp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((cp, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_c, 1), jnp.float32),   # acc
+            pltpu.VMEM((tile_c, 1), jnp.int32),     # alive
+            pltpu.VMEM((tile_c, 1), jnp.int32),     # nseg
+            pltpu.VMEM((tile_c, seg), jnp.float32), # feature-block landing buf
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=_compiler_params_cls()(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q2, x, thr, alpha.astype(jnp.float32), beta.astype(jnp.float32),
+      margin.astype(jnp.float32))
+    return dist[:c, 0], rej[:c, 0].astype(bool), segs[:c, 0]
+
+
+# ---------------------------------------------------------------------------
+# packed-input variant: dfloat_unpack fused into the FEE datapath
+# ---------------------------------------------------------------------------
+
+
+def _block_positions(cfg: dfl.DfloatConfig, seg: int):
+    """Per-FEE-block static decode positions and burst-aligned word ranges.
+
+    Returns ``blocks[k] = (positions, w0, w1)``: ``positions`` is the
+    (word, bit-offset, segment) list of the block's features, ``[w0, w1)`` the
+    word span that covers them (including the carry word of fields that span
+    a 32-bit word boundary — never a burst boundary, by layout rule 1).
+    """
+    pos, w_words = dfl.feature_positions(cfg)
+    d = cfg.dim
+    assert d % seg == 0, (d, seg)
+    blocks = []
+    for k in range(d // seg):
+        p = pos[k * seg : (k + 1) * seg]
+        hi = max(wi + (1 if ofs + s.width > 32 else 0) for wi, ofs, s in p)
+        blocks.append((tuple(p), min(wi for wi, _, _ in p), hi + 1))
+    return blocks, w_words
+
+
+def _decode_block(xp, positions, w0: int):
+    """Decode one FEE feature block from packed words (slice-local at ``w0``).
+
+    All shifts/masks are static scalars — the software analogue of the preset
+    offset register driving the barrel shifter (paper Fig. 10d).
+    """
+    cols = []
+    for wi, ofs, s in positions:
+        v = xp[:, wi - w0] >> jnp.uint32(ofs)
+        if ofs + s.width > 32:
+            v = v | (xp[:, wi - w0 + 1] << jnp.uint32(32 - ofs))
+        fld = v & jnp.uint32((1 << s.width) - 1)
+        cols.append(dfl.decode_field_jnp(fld, s.n_exp, s.n_man, s.bias))
+    return jnp.stack(cols, axis=-1)                            # (TILE_C, seg)
+
+
+def _packed_kernel(q_ref, xp_ref, thr_ref, alpha_ref, beta_ref, margin_ref,
+                   dist_ref, rej_ref, segs_ref,
+                   acc, alive, nseg, *, metric: str, n_segs: int,
+                   last_valid_seg: int, blocks):
+    s = pl.program_id(1)
+    _init_scratch(s, acc, alive, nseg)
+    tile_alive = alive[:].max() > 0
+
+    # the decode offsets of block k are compile-time constants, so the segment
+    # loop is unrolled into one `pl.when` branch per block
+    for k, (positions, w0, _w1) in enumerate(blocks):
+        @pl.when(tile_alive & (s == k))
+        def _compute(k=k, positions=positions):
+            x = _decode_block(xp_ref[:, :], positions, 0)
+            part = _part_distance(x, q_ref[:, :], metric)
+            _accumulate_exit(part, k, thr_ref, alpha_ref, beta_ref, margin_ref,
+                             acc, alive, nseg, last_valid_seg)
+
+    _emit_outputs(s, dist_ref, rej_ref, segs_ref, acc, alive, nseg, n_segs)
+
+
+def _packed_skipdma_kernel(q_ref, xp_hbm, thr_ref, alpha_ref, beta_ref,
+                           margin_ref, dist_ref, rej_ref, segs_ref,
+                           acc, alive, nseg, buf, sem,
+                           *, metric: str, n_segs: int, last_valid_seg: int,
+                           blocks, tile_c: int):
+    i, s = pl.program_id(0), pl.program_id(1)
+    _init_scratch(s, acc, alive, nseg)
+    tile_alive = alive[:].max() > 0
+
+    for k, (positions, w0, w1) in enumerate(blocks):
+        @pl.when(tile_alive & (s == k))
+        def _fetch_compute(k=k, positions=positions, w0=w0, w1=w1):
+            dma = pltpu.make_async_copy(
+                xp_hbm.at[pl.ds(i * tile_c, tile_c), pl.ds(w0, w1 - w0)],
+                buf.at[:, pl.ds(0, w1 - w0)], sem)
+            dma.start()
+            dma.wait()
+            x = _decode_block(buf[:, :], positions, w0)
+            part = _part_distance(x, q_ref[:, :], metric)
+            _accumulate_exit(part, k, thr_ref, alpha_ref, beta_ref, margin_ref,
+                             acc, alive, nseg, last_valid_seg)
+
+    _emit_outputs(s, dist_ref, rej_ref, segs_ref, acc, alive, nseg, n_segs)
+
+
+@functools.partial(jax.jit, static_argnames=("dfloat_cfg", "seg", "metric",
+                                             "tile_c", "interpret", "skip_dma"))
+def fee_distance_packed_pallas(q, xp, threshold, alpha, beta, margin, *,
+                               dfloat_cfg: dfl.DfloatConfig, seg: int,
+                               metric: str = "l2", tile_c: int = 128,
+                               interpret: bool = True, skip_dma: bool = False):
+    """q (D,) f32, xp (C, W) packed uint32 -> (dist, rejected, segs_used).
+
+    The Dfloat decode is fused into the FEE accumulate loop, so only packed
+    bytes cross HBM; decoded features exist only in VMEM, one block at a time.
+    Results are bit-compatible with ``fee_distance_pallas`` over
+    ``dfloat.emulate_db`` data.  ``skip_dma=True`` keeps the bitstream in HBM
+    and fetches each live block's burst-aligned word span with a manual async
+    copy — exited tiles skip the remaining packed bursts entirely.
+    """
+    c, w = xp.shape
+    d = dfloat_cfg.dim
+    n_segs = d // seg
+    assert n_segs * seg == d, (d, seg)
+    blocks, w_words = _block_positions(dfloat_cfg, seg)
+    assert w == w_words, (w, w_words)
+    pad_c = (-c) % tile_c
+    if pad_c:
+        xp = jnp.pad(xp, ((0, pad_c), (0, 0)))
+    cp = c + pad_c
+    q2 = q.reshape(1, d)
+    thr = jnp.reshape(threshold, (1,)).astype(jnp.float32)
+
+    common = dict(metric=metric, n_segs=n_segs, last_valid_seg=n_segs - 1,
+                  blocks=tuple(blocks))
+    if skip_dma:
+        kern = functools.partial(_packed_skipdma_kernel, tile_c=tile_c, **common)
+        xp_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        scratch_extra = [
+            pltpu.VMEM((tile_c, max(w1 - w0 for _, w0, w1 in blocks)),
+                       jnp.uint32),                       # word-span landing buf
+            pltpu.SemaphoreType.DMA,
+        ]
+    else:
+        kern = functools.partial(_packed_kernel, **common)
+        xp_spec = pl.BlockSpec((tile_c, w), lambda i, s: (i, 0))
+        scratch_extra = []
+    dist, rej, segs = pl.pallas_call(
+        kern,
+        grid=(cp // tile_c, n_segs),
+        in_specs=[
+            pl.BlockSpec((1, seg), lambda i, s: (0, s)),            # q
+            xp_spec,                                                # packed x
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # threshold
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # alpha
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # beta
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # margin
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_c, 1), lambda i, s: (i, 0)),
+            pl.BlockSpec((tile_c, 1), lambda i, s: (i, 0)),
+            pl.BlockSpec((tile_c, 1), lambda i, s: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((cp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((cp, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_c, 1), jnp.float32),   # acc
+            pltpu.VMEM((tile_c, 1), jnp.int32),     # alive
+            pltpu.VMEM((tile_c, 1), jnp.int32),     # nseg
+            *scratch_extra,
+        ],
+        compiler_params=_compiler_params_cls()(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q2, xp, thr, alpha.astype(jnp.float32), beta.astype(jnp.float32),
       margin.astype(jnp.float32))
     return dist[:c, 0], rej[:c, 0].astype(bool), segs[:c, 0]

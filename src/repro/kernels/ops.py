@@ -4,18 +4,29 @@ On TPU these run compiled (interpret=False); on this CPU container they run
 in interpret mode (kernel body executed in Python), which is the validation
 target per the build spec.  ``backend="jnp"`` selects the pure-jnp oracle —
 used both as the reference in tests and as the fast path for CPU benchmarks.
+``backend="pallas_skip_dma"`` selects the manual-DMA kernels: feature blocks
+(or packed word spans) are fetched from HBM with async copies gated on the
+tile-exit flag, so exited tiles skip the remaining memory traffic, not just
+the compute.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.core import dfloat as dfl
 from repro.kernels import ref as ref_ops
 from repro.kernels.dfloat_unpack import dfloat_unpack_pallas
-from repro.kernels.fee_distance import fee_distance_pallas
+from repro.kernels.fee_distance import (fee_distance_packed_pallas,
+                                        fee_distance_pallas,
+                                        fee_distance_skipdma_pallas)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _use_ref(backend: str) -> bool:
+    return backend == "jnp" or (backend == "auto" and not _on_tpu())
 
 
 def fee_distance(q, x, threshold, alpha, beta, margin, *, seg: int,
@@ -24,17 +35,55 @@ def fee_distance(q, x, threshold, alpha, beta, margin, *, seg: int,
 
     Returns (dist, rejected, segs_used); dist is partial for rejected lanes.
     """
-    if backend == "jnp" or (backend == "auto" and not _on_tpu()):
+    if _use_ref(backend):
         return ref_ops.fee_distance_ref(q, x, threshold, alpha, beta, margin,
                                         seg=seg, metric=metric)
+    if backend == "pallas_skip_dma":
+        return fee_distance_skipdma_pallas(q, x, threshold, alpha, beta,
+                                           margin, seg=seg, metric=metric,
+                                           tile_c=tile_c,
+                                           interpret=not _on_tpu())
     return fee_distance_pallas(q, x, threshold, alpha, beta, margin, seg=seg,
                                metric=metric, tile_c=tile_c,
                                interpret=not _on_tpu())
 
 
+def fee_distance_packed(q, xp, threshold, alpha, beta, margin, *,
+                        dfloat_cfg: dfl.DfloatConfig, seg: int,
+                        metric: str = "l2", backend: str = "auto",
+                        tile_c: int = 128):
+    """Fused Dfloat-decode + early-exit distance straight from the packed
+    uint32 bitstream (``xp`` (C, W)) — the packed-native scoring hot path.
+
+    Bit-compatible with :func:`fee_distance` over ``dfloat.emulate_db`` data.
+    """
+    if _use_ref(backend):
+        return ref_ops.fee_distance_packed_ref(q, xp, threshold, alpha, beta,
+                                               margin, dfloat_cfg=dfloat_cfg,
+                                               seg=seg, metric=metric)
+    return fee_distance_packed_pallas(q, xp, threshold, alpha, beta, margin,
+                                      dfloat_cfg=dfloat_cfg, seg=seg,
+                                      metric=metric, tile_c=tile_c,
+                                      interpret=not _on_tpu(),
+                                      skip_dma=backend == "pallas_skip_dma")
+
+
+def dfloat_unpack_rows(packed, cfg: dfl.DfloatConfig, *,
+                       backend: str = "auto", tile_c: int = 128):
+    """Traceable packed-row decode: (C, W) uint32 -> (C, D) f32, bit-exact.
+
+    Unlike :func:`dfloat_unpack` this is safe inside jit/vmap (no host numpy),
+    so the search loop can derive f32 views of packed rows on demand.
+    """
+    if _use_ref(backend) or backend == "pallas_skip_dma":
+        return dfl.unpack_rows_jnp(packed, cfg)
+    return dfloat_unpack_pallas(packed, cfg, tile_c=tile_c,
+                                interpret=not _on_tpu())
+
+
 def dfloat_unpack(packed, cfg, *, backend: str = "auto", tile_c: int = 128):
     """Dfloat process module: packed uint32 rows -> f32 features (bit-exact)."""
-    if backend == "jnp" or (backend == "auto" and not _on_tpu()):
+    if _use_ref(backend):
         import jax.numpy as jnp
         import numpy as np
         return jnp.asarray(ref_ops.dfloat_unpack_ref(np.asarray(packed), cfg))

@@ -39,6 +39,17 @@ def fee_search_semantics_ref(q, x, threshold, alpha, beta, margin, *, seg, metri
                                 seg=seg, metric=metric)
 
 
+def fee_distance_packed_ref(q, xp, threshold, alpha, beta, margin, *,
+                            dfloat_cfg: dfl.DfloatConfig, seg, metric="l2"):
+    """Oracle for the packed-input fused kernel: decode the bitstream with the
+    traceable jnp decoder, then score with the exact same FEE arithmetic as
+    the f32 oracle — so packed scoring is bit-identical to scoring
+    ``dfloat.emulate_db`` data (the ``db_q`` view)."""
+    x = dfl.unpack_rows_jnp(xp, dfloat_cfg)
+    return fee_distance_ref(q, x, threshold, alpha, beta, margin,
+                            seg=seg, metric=metric)
+
+
 def dfloat_unpack_ref(packed: np.ndarray, cfg: dfl.DfloatConfig) -> np.ndarray:
     """Oracle for kernels.dfloat_unpack (numpy bit-exact decoder)."""
     return dfl.unpack_db(packed, cfg)

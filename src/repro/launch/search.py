@@ -17,6 +17,8 @@ def main(argv=None):
     ap.add_argument("--m", type=int, default=16)
     ap.add_argument("--no-fee", action="store_true")
     ap.add_argument("--no-dfloat", action="store_true")
+    ap.add_argument("--storage", default="f32", choices=["f32", "packed"],
+                    help="score dense f32 rows or the packed Dfloat bitstream")
     ap.add_argument("--dfloat-target", type=float, default=0.9)
     ap.add_argument("--backend", default="local",
                     choices=["local", "sharded", "ndpsim"])
@@ -56,8 +58,11 @@ def main(argv=None):
     if args.save:
         print(f"index saved to {idx.save(args.save)}")
 
+    if args.storage == "packed" and args.no_dfloat:
+        raise SystemExit("--storage packed scores the Dfloat bitstream; "
+                         "drop --no-dfloat")
     params = SearchParams(ef=args.ef, k=args.k, use_fee=not args.no_fee,
-                          use_dfloat=not args.no_dfloat)
+                          use_dfloat=not args.no_dfloat, storage=args.storage)
 
     if args.backend == "sharded":
         import jax

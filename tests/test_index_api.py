@@ -1,13 +1,11 @@
 """Unified Index API: persistence round trip, typed params, backend parity,
-and the legacy deprecation shims."""
+and the removal of the legacy surface."""
 import dataclasses
-import warnings
 
 import jax
 import numpy as np
 import pytest
 
-from repro.core.fee import FeeParams
 from repro.index import Index, IndexSpec, SearchParams, SearchResult
 
 PARAMS = SearchParams(ef=48, k=10, use_dfloat=False)
@@ -74,7 +72,7 @@ def test_save_load_round_trip(unit_db, unit_index, tmp_path):
 def test_load_rejects_unknown_format(unit_index, tmp_path):
     path = unit_index.save(tmp_path / "idx.naszip")
     spec = path / "spec.json"
-    spec.write_text(spec.read_text().replace('"format_version": 1',
+    spec.write_text(spec.read_text().replace('"format_version": 2',
                                              '"format_version": 99'))
     with pytest.raises(ValueError):
         Index.load(path)
@@ -133,36 +131,15 @@ def test_searcher_cache_reuses_compiled_fn(unit_index):
 
 
 # ---------------------------------------------------------------------------
-# legacy shims (one-release deprecation window)
+# legacy surface removed (deprecation window closed after PR 2)
 # ---------------------------------------------------------------------------
 
 
-def test_legacy_vdzip_and_run_search_shims(unit_db, unit_index):
-    from repro.core import vdzip
-    from repro.core.search import SearchConfig, run_search
-
-    with pytest.deprecated_call():
-        legacy = vdzip.build(unit_db, m=8, seg=16, dfloat_recall_target=None)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        res = vdzip.evaluate(legacy, unit_db, ef=48, k=10, use_dfloat=False)
-    assert "hops" not in res, "trace must now be opt-in"
-    ref = unit_index.search(unit_db.queries, PARAMS)
-    np.testing.assert_array_equal(
-        legacy.search(unit_db.queries, ef=48, k=10, use_dfloat=False)["ids"],
-        ref.ids)
-
-    cfg = SearchConfig(ef=48, k=10, metric="l2", seg=16, use_fee=True)
-    with pytest.deprecated_call():
-        out = run_search(unit_index.db_rot, unit_index.graph,
-                         unit_index.transform_queries(unit_db.queries[:8]),
-                         cfg, fee_params=unit_index.fee.to_dict())
-    assert out["ids"].shape == (8, 10)
-
-
-def test_make_fee_params_shim_warns(unit_index):
+def test_legacy_shims_are_gone():
+    import repro.core as core
     from repro.core import fee as fee_mod
+    from repro.core import search as search_mod
 
-    with pytest.deprecated_call():
-        fp = fee_mod.make_fee_params(unit_index.spca, unit_index.fee.to_dict())
-    assert isinstance(fp, FeeParams)
+    assert not hasattr(core, "vdzip")
+    assert not hasattr(search_mod, "run_search")
+    assert not hasattr(fee_mod, "make_fee_params")

@@ -70,6 +70,40 @@ def test_dfloat_unpack_kernel_bit_exact(draw):
     assert np.array_equal(got, want)
 
 
+@given(n_cases=6)
+def test_fee_distance_packed_kernel_vs_ref_random_layouts(draw):
+    """Fused packed kernel vs the decode-then-score oracle across random
+    Dfloat layouts (both DMA modes)."""
+    from repro.kernels.fee_distance import fee_distance_packed_pallas
+
+    d = draw.choice([64, 128], "d")
+    seg = 16
+    n = draw.integers(10, 90, "n")
+    x = draw.array((n, d), scale=np.exp(draw.floats(-1, 1, "logscale")))
+    widths = sorted({draw.choice([32, 24, 21, 18, 16, 14, 12], f"w{i}")
+                     for i in range(draw.integers(1, 3, "nseg"))}, reverse=True)
+    runs, left = [], d
+    for i, w in enumerate(widths):
+        nd = left if i == len(widths) - 1 else max(1, left // (len(widths) - i))
+        runs.append((w, dfl.EXP_BITS[w], nd))
+        left -= nd
+    cfg = dfl.make_config(d, runs, x)
+    packed = jnp.asarray(dfl.pack_db(x, cfg))
+    s = d // seg
+    ones = jnp.ones(s, jnp.float32)
+    thr = jnp.float32(np.median(((x - x[0]) ** 2).sum(1)))
+    q = jnp.asarray(x[0])
+    want = ref_ops.fee_distance_packed_ref(q, packed, thr, ones * 1.2, ones,
+                                           ones * 0, dfloat_cfg=cfg, seg=seg)
+    skip_dma = draw.choice([False, True], "skip_dma")
+    got = fee_distance_packed_pallas(q, packed, thr, ones * 1.2, ones,
+                                     ones * 0, dfloat_cfg=cfg, seg=seg,
+                                     tile_c=32, skip_dma=skip_dma)
+    np.testing.assert_allclose(got[0], want[0], rtol=3e-5, atol=2e-4)
+    assert np.array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    assert np.array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+
 def test_ops_dispatch_cpu_uses_ref():
     from repro.kernels import ops
     rng = np.random.default_rng(0)

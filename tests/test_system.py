@@ -6,7 +6,7 @@ from repro.index import SearchParams
 
 
 @pytest.mark.slow
-def test_end_to_end_vdzip_pipeline(unit_db, unit_index_dfloat):
+def test_end_to_end_naszip_pipeline(unit_db, unit_index_dfloat):
     """Full paper pipeline: PCA -> beta -> graph -> Dfloat -> FEE search,
     recall at the paper's operating point (recall@10 >= 0.85 on the tiny
     test DB; the full-size stand-ins hit >= 0.9 in the benchmarks)."""
