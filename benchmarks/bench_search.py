@@ -22,6 +22,10 @@ Dataset defaults to ``sift`` (the paper's headline workload); override with
 ``BENCH_DATASET=unit`` for the CI smoke job (tiny synthetic DB, seconds).
 ``BENCH_STORAGE=packed`` switches the interleaved A/B pair itself to
 packed-native scoring (the CI smoke matrix runs once per storage mode).
+``BENCH_CHURN=1`` (or ``python benchmarks/bench_search.py --churn``) adds a
+``mutation`` row: a 10%-append + 10%-delete churn through
+``repro.streaming.MutableIndex`` reporting append throughput, repair cost,
+post-churn QPS vs. the frozen pre-churn index, and NDP write-burst totals.
 """
 from __future__ import annotations
 
@@ -29,8 +33,15 @@ import dataclasses
 import json
 import os
 import platform
+import sys
 import time
 from pathlib import Path
+
+if __package__ in (None, ""):
+    # direct execution (`python benchmarks/bench_search.py --churn`) — as a
+    # package import the caller owns sys.path (see benchmarks/run.py)
+    sys.path.insert(0, str(Path(__file__).parent.parent))
+    sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
 import numpy as np
 
@@ -118,6 +129,56 @@ def _ndpsim_row(idx, db, params: SearchParams, q) -> dict:
     )
 
 
+def _mutation_row(idx, db, params: SearchParams, q, frozen_qps: float) -> dict:
+    """Churn smoke: 10% appends + 10% deletes, then serve the mutated shard.
+
+    ``frozen_qps`` is the pre-churn QPS of the same operating point; the row
+    reports the post-churn ratio so the trajectory catches tombstone-mask or
+    snapshot-overhead regressions mechanically.
+    """
+    from repro.streaming import MutableIndex
+
+    ef_build = max(48, params.ef)
+    mi = MutableIndex(idx, ef_build=ef_build)
+    rng = np.random.default_rng(0)
+    # whole sub-batches so the timed run reuses one compiled search shape
+    n_mut = -(-min(max(db.n // 10, 64), 2048) // mi.sub_batch) * mi.sub_batch
+    noise = 0.05 * float(db.vectors.std())
+    new = db.vectors[rng.integers(0, db.n, n_mut)] + noise * \
+        rng.standard_normal((n_mut, db.dim)).astype(np.float32)
+    # untimed warm-up on a throwaway wrapper (same capacity shapes): compiles
+    # the internal candidate search once, so append_rows_per_s measures the
+    # engine, not XLA lowering
+    MutableIndex(idx, ef_build=ef_build).append(new[: mi.sub_batch])
+    t0 = time.perf_counter()
+    mi.append(new)
+    t_append = time.perf_counter() - t0
+    dels = rng.choice(db.n, n_mut, replace=False)
+    mi.delete(dels)
+    t0 = time.perf_counter()
+    frozen = mi.freeze()                    # drains the lazy delete repair
+    t_repair = time.perf_counter() - t0
+
+    run = frozen.searcher("local", params)
+    qps = _min_qps(run, q)
+    out = run(q)
+    ws = mi.write_stats()
+    return dict(
+        ef=params.ef, expand=params.expand, storage=params.storage,
+        rows_appended=n_mut, rows_deleted=n_mut,
+        append_rows_per_s=round(n_mut / max(t_append, 1e-9), 1),
+        insert_link_ms=round(t_append / n_mut * 1e3, 3),
+        delete_repair_ms_per_row=round(t_repair / n_mut * 1e3, 3),
+        post_churn_qps=round(qps, 1),
+        qps_vs_frozen=round(qps / max(frozen_qps, 1e-9), 3),
+        tombstones_in_results=int(np.isin(out.ids, dels).sum()),
+        generation=frozen.generation,
+        edge_writes=mi.stats.edge_writes,
+        write_dram_kb=round(ws.dram_bytes / 1e3, 1),
+        write_burst_groups=ws.write_burst_groups,
+    )
+
+
 def _memory_row(idx) -> dict:
     f32 = 4 * idx.dim
     packed = 4 * idx.db_packed.shape[1]
@@ -130,9 +191,12 @@ def _memory_row(idx) -> dict:
 
 
 def run_json(out_path: str | Path = "BENCH_search.json",
-             dataset: str | None = None, storage: str | None = None) -> dict:
+             dataset: str | None = None, storage: str | None = None,
+             churn: bool | None = None) -> dict:
     dataset = dataset or os.environ.get("BENCH_DATASET", "sift")
     storage = storage or os.environ.get("BENCH_STORAGE", "f32")
+    if churn is None:
+        churn = os.environ.get("BENCH_CHURN", "") not in ("", "0")
     db = make_dataset(dataset)
     tiny = db.n <= 4096
     spec = (IndexSpec.for_db(db, m=8, dfloat_recall_target=None) if tiny
@@ -192,6 +256,8 @@ def run_json(out_path: str | Path = "BENCH_search.json",
         ndpsim=_ndpsim_row(idx, db, p_multi, q),
         memory=_memory_row(idx),
     )
+    if churn:
+        result["mutation"] = _mutation_row(idx, db, p_multi, q, multi["qps"])
     Path(out_path).write_text(json.dumps(result, indent=1) + "\n")
     print(f"[bench_search] wrote {out_path} (storage={storage}): "
           f"qps {base['qps']} -> {multi['qps']} "
@@ -202,6 +268,12 @@ def run_json(out_path: str | Path = "BENCH_search.json",
           f"sharded qps {result['sharded']['qps']}, "
           f"ndpsim qps {result['ndpsim']['qps']}, "
           f"{result['memory']['compression']}x bytes/vec")
+    if churn:
+        m = result["mutation"]
+        print(f"[bench_search] mutation: {m['append_rows_per_s']} appends/s, "
+              f"repair {m['delete_repair_ms_per_row']} ms/row, post-churn "
+              f"qps {m['post_churn_qps']} ({m['qps_vs_frozen']}x frozen), "
+              f"{m['tombstones_in_results']} tombstones leaked")
     return result
 
 
@@ -210,3 +282,17 @@ def main(csv) -> None:
     csv.rows.append(("bench_search_speedup", 0.0,
                      dict(speedup_qps=res["speedup_qps"],
                           hops_reduction=res["hops_reduction"])))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--churn", action="store_true",
+                    help="add the streaming-mutation smoke row")
+    ap.add_argument("--dataset", default=None)
+    ap.add_argument("--storage", default=None, choices=[None, "f32", "packed"])
+    ap.add_argument("--out", default="BENCH_search.json")
+    a = ap.parse_args()
+    run_json(a.out, dataset=a.dataset, storage=a.storage,
+             churn=a.churn or None)

@@ -3,12 +3,16 @@ recall@10 >= 0.9, normalized to plain HNSW (fp32, no early exit).
 
 PQ must weaken compression (more sub-quantizers) to reach high recall;
 RaBitQ filters with 1-bit codes but re-ranks survivors with full vectors;
-VD-Zip cuts both dims (FEE-sPCA) and bits/feature (Dfloat)."""
+VD-Zip cuts both dims (FEE-sPCA) and bits/feature (Dfloat).  List-phase
+bytes use the same accounting as the ndpsim engine: dense 4B ids for the
+baselines, sorted delta + varint codes for NasZip
+(``ndpsim.compressed_list_bytes``)."""
 import numpy as np
 
 from benchmarks.common import get_index, get_traces
 from repro.core import baselines as bl
 from repro.data.synthetic import recall_at_k
+from repro.ndpsim import compressed_list_bytes
 
 DATASETS = ("sift", "msmarco")
 
@@ -43,7 +47,18 @@ def main(csv):
             _, _, out_plain, _, _ = get_traces(name, use_fee=False, use_dfloat=False,
                                                n_queries=64)
             n_eval_plain = (out_plain.trace["nbrs"] >= 0).sum() / 64
-            hnsw_bytes = n_eval_plain * db.dim * 4
+            # list-phase traffic: each expanded node fetches its stored
+            # neighbor list — dense 4B ids for the baselines, the delta/
+            # varint coding for NasZip (ndpsim's accounting, rounded up to
+            # whole 64B lines per list fetch either way)
+            adj = idx.graph.base_adjacency
+            lb_dense = -(-4 * (adj >= 0).sum(1) // 64) * 64
+            lb_varint = -(-compressed_list_bytes(adj) // 64) * 64
+            exp_plain = out_plain.trace["node"][out_plain.trace["node"] >= 0]
+            exp_vdz = out.trace["node"][out.trace["node"] >= 0]
+            hnsw_list_pq = lb_dense[exp_plain].sum() / 64    # per query
+            vdzip_list_pq = lb_varint[exp_vdz].sum() / 64
+            hnsw_bytes = n_eval_plain * db.dim * 4 + hnsw_list_pq
             # VD-Zip: sub-channel burst groups touched per eval (Dfloat+FEE).
             # bursts_for_prefix counts per-device 128-bit bursts; the 4
             # devices stream in lockstep, so bytes = ceil(n_b/dev) * 64B —
@@ -54,10 +69,12 @@ def main(csv):
             for s in np.unique(segs[segs > 0]):
                 n_b = idx.dfloat_cfg.bursts_for_prefix(int(s) * idx.seg)
                 groups += (segs == s).sum() * -(-n_b // dev)
-            vdzip_bytes = groups * 64 / 64       # 64B per group; 64 queries
+            vdzip_bytes = groups * 64 / 64 + vdzip_list_pq   # 64 queries
             # RaBitQ-lite: 1-bit scan of evaluated candidates + rerank 3*k
+            # (walks the same graph -> same dense list traffic as HNSW)
             rq = bl.fit_rabitq(idx.db_rot, db.metric)
-            rbq_bytes = n_eval_plain * (db.dim / 8 + 8) + 30 * db.dim * 4
+            rbq_bytes = (n_eval_plain * (db.dim / 8 + 8) + 30 * db.dim * 4
+                         + hnsw_list_pq)
             pq_bytes, pq_rec, n_sub = pq_traffic(db, idx, db.gt, db.queries[:24])
             base = hnsw_bytes
             print(f"{name:9s} hnsw=1.00  pq={pq_bytes/base:.2f} (m={n_sub}, "

@@ -85,6 +85,18 @@ class DfloatConfig:
             w[s.start : s.start + s.n_dims] = s.width
         return w
 
+    def packed_row_bytes(self) -> int:
+        """Bytes of one packed row (uint32 words under the burst-aligned
+        layout) — what an in-place streaming append writes to the tail."""
+        return 4 * packed_words(self)
+
+    def row_burst_groups(self) -> int:
+        """64B sub-channel burst groups to stream one full row (the
+        ``devices_per_subchannel`` devices move in lockstep, rule 4) — the
+        unit both the read and the write traffic accounting use."""
+        dev = max(1, self.devices_per_subchannel)
+        return -(-self.bursts_per_vector() // dev)
+
 
 def fp32_config(d: int) -> DfloatConfig:
     return DfloatConfig((DfloatSegment(0, d, 8, 23, 127),))

@@ -137,6 +137,33 @@ def build_graph(vectors: np.ndarray, m: int = 16, metric: str = "l2",
 
 
 # ---------------------------------------------------------------------------
+# incremental repair (streaming mutation — repro.streaming)
+# ---------------------------------------------------------------------------
+
+
+def prune_candidates(p_vec: np.ndarray, cand_ids: np.ndarray,
+                     cand_vecs: np.ndarray, metric: str,
+                     keep: int) -> np.ndarray:
+    """Occlusion-prune one node's candidate neighborhood.
+
+    ``cand_ids``/``cand_vecs`` must be sorted ascending by distance to
+    ``p_vec`` (beam-search output order).  Reuses :func:`_occlusion_prune` on
+    a local id remap — slot 0 is the node itself, slots 1..C the candidates —
+    so incremental inserts and delete repairs apply the exact same RNG
+    heuristic (including the nearest-pruned backfill) as the offline build.
+    Returns up to ``keep`` global ids.
+    """
+    c = len(cand_ids)
+    if c == 0:
+        return np.empty(0, np.int32)
+    local_vecs = np.concatenate([p_vec[None], cand_vecs]).astype(np.float32)
+    local_adj = np.arange(1, c + 1, dtype=np.int32)[None]
+    kept = _occlusion_prune(local_vecs, local_adj, metric, min(keep, c))[0]
+    kept = kept[kept > 0] - 1
+    return np.asarray(cand_ids, np.int32)[kept]
+
+
+# ---------------------------------------------------------------------------
 # DaM — data-aware neighbor-list mapping (paper §V-C2, Fig. 12)
 # ---------------------------------------------------------------------------
 

@@ -26,6 +26,15 @@ uint32 bitstream directly — rows are gathered packed and decoded inside the
 FEE kernel (``kernels.ops.fee_distance_packed``), bit-identical to scoring
 the ``emulate_db`` f32 view while moving ~3x fewer bytes per gather.
 
+Streaming mutation support: ``tombstone`` is an optional packed uint32 bitmap
+(bit set = row is dead — deleted, or an unallocated capacity-tail slot of a
+``repro.streaming.MutableIndex`` snapshot).  Dead rows are folded into the
+FEE exit mask (``kernels.ops`` ``lane_mask``): they are marked visited, cost
+no distance work (``segs_used == 0`` — the sub-channel checks its resident
+tombstone bitmap before issuing the first burst), never enter the beam, and a
+final beam re-rank guarantees they never appear in results even when the
+graph entry point itself has been deleted (the entry stays navigable).
+
 Trace layout (per query): ``node`` is (H, E) — the up-to-``expand`` nodes
 popped per hop (-1 pad) — and ``nbrs``/``segs``/``cand_d``/``src`` are (H, L)
 with L = max(M, E*M/2): the frontier batch after the fresh-first compaction,
@@ -146,13 +155,15 @@ def merge_beam(beam_ids, beam_d, expanded, cand_ids, cand_d):
 
 
 def _score(q, tgt, threshold, fee: FeeParams | None, cfg: SearchConfig,
-           dfl_cfg: dfl.DfloatConfig | None = None):
+           dfl_cfg: dfl.DfloatConfig | None = None, alive=None):
     """FEE/exact distances for one gathered frontier batch, routed through the
     kernel dispatcher (Pallas with DMA skipping on TPU, jnp oracle on CPU).
 
     With ``cfg.storage == "packed"`` the batch ``tgt`` is (L, W) packed uint32
     rows straight from the bitstream; the fused kernel decodes them on the fly
-    (bit-identical to scoring the ``emulate_db`` f32 view).
+    (bit-identical to scoring the ``emulate_db`` f32 view).  ``alive`` is the
+    optional tombstone lane mask: dead lanes join the FEE exit mask before the
+    first segment, so they report ``segs_used == 0`` (no streamed bursts).
     """
     packed = cfg.storage == "packed"
     n_segs = (dfl_cfg.dim if packed else tgt.shape[1]) // cfg.seg
@@ -161,20 +172,44 @@ def _score(q, tgt, threshold, fee: FeeParams | None, cfg: SearchConfig,
             return kops.fee_distance_packed(
                 q, tgt, threshold, fee.alpha, fee.beta, fee.margin,
                 dfloat_cfg=dfl_cfg, seg=cfg.seg, metric=cfg.metric,
-                backend=cfg.fee_backend)
+                backend=cfg.fee_backend, lane_mask=alive)
         return kops.fee_distance(q, tgt, threshold, fee.alpha, fee.beta,
                                  fee.margin, seg=cfg.seg, metric=cfg.metric,
-                                 backend=cfg.fee_backend)
+                                 backend=cfg.fee_backend, lane_mask=alive)
     if packed:
         tgt = kops.dfloat_unpack_rows(tgt, dfl_cfg, backend=cfg.fee_backend)
     score = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
-    rejected = jnp.zeros(tgt.shape[0], bool)
+    rejected = (jnp.zeros(tgt.shape[0], bool) if alive is None else ~alive)
     segs_used = jnp.full((tgt.shape[0],), n_segs, jnp.int32)
+    if alive is not None:
+        segs_used = jnp.where(alive, segs_used, 0)
     return score, rejected, segs_used
 
 
+def tombstone_lookup(tombstone, ids):
+    """Dead-bit gather: True where ``ids`` (clamped to >= 0) is tombstoned."""
+    safe = jnp.maximum(ids, 0)
+    bit = jnp.uint32(1) << (safe & 31).astype(jnp.uint32)
+    return (tombstone[safe >> 5] & bit) != 0
+
+
+def exclude_dead(beam_ids, beam_d, tombstone):
+    """Final re-rank of the beam with tombstoned entries pushed out.
+
+    Candidate scoring already rejects dead rows, but the entry point is seeded
+    into the beam unconditionally (it must stay navigable even when deleted) —
+    this one cheap top_k guarantees dead ids never reach the top-k output:
+    dead lanes get dist BIG *and* id -1 (the underfull-beam padding), so even
+    a beam with fewer than k live entries never surfaces a tombstoned id.
+    """
+    dead = tombstone_lookup(tombstone, beam_ids) & (beam_ids >= 0)
+    neg_d, order = jax.lax.top_k(-jnp.where(dead, BIG, beam_d),
+                                 beam_ids.shape[0])
+    return jnp.where(dead[order], -1, beam_ids[order]), -neg_d
+
+
 def _hop_body(state, vectors, adj, q, fee: FeeParams | None, cfg: SearchConfig,
-              dfl_cfg: dfl.DfloatConfig | None = None):
+              dfl_cfg: dfl.DfloatConfig | None = None, tombstone=None):
     beam_ids, beam_d, expanded, visited = state
     ef = beam_ids.shape[0]
     e, m = min(cfg.expand, ef), adj.shape[1]
@@ -207,9 +242,16 @@ def _hop_body(state, vectors, adj, q, fee: FeeParams | None, cfg: SearchConfig,
         src = jnp.arange(e * m, dtype=jnp.int32) // m
     visited = visited.at[w].add(jnp.where(fresh, bit, jnp.uint32(0)))
 
+    # tombstoned lanes stay in ``fresh`` (visited-marked, never re-checked)
+    # but are folded into the FEE exit mask: zero segments streamed, never
+    # inserted into the beam, and invisible to the trace (``live``).
+    alive = None if tombstone is None else ~tombstone_lookup(tombstone, safe)
+    live = fresh if alive is None else fresh & alive
+
     threshold = beam_d[-1]
     tgt = vectors[safe]                          # (L, D) f32 / (L, W) packed
-    score, rejected, segs_used = _score(q, tgt, threshold, fee, cfg, dfl_cfg)
+    score, rejected, segs_used = _score(q, tgt, threshold, fee, cfg, dfl_cfg,
+                                        alive)
 
     # ---- single top-k beam merge over (ef + L) candidates
     cand_d = jnp.where(fresh & ~rejected, score, BIG)
@@ -218,12 +260,12 @@ def _hop_body(state, vectors, adj, q, fee: FeeParams | None, cfg: SearchConfig,
 
     trace = dict(
         node=nodes.astype(jnp.int32),
-        nbrs=jnp.where(fresh, nbrs, -1).astype(jnp.int32),
-        segs=jnp.where(fresh, segs_used, 0).astype(jnp.int32),
+        nbrs=jnp.where(live, nbrs, -1).astype(jnp.int32),
+        segs=jnp.where(live, segs_used, 0).astype(jnp.int32),
         cand_d=cand_d,                                   # BIG unless accepted
-        src=jnp.where(fresh, src, -1).astype(jnp.int32),  # parent of slot j
-        n_eval=fresh.sum().astype(jnp.int32),
-        dims=(jnp.where(fresh, segs_used, 0).sum() * cfg.seg).astype(jnp.int32),
+        src=jnp.where(live, src, -1).astype(jnp.int32),   # parent of slot j
+        n_eval=live.sum().astype(jnp.int32),
+        dims=(jnp.where(live, segs_used, 0).sum() * cfg.seg).astype(jnp.int32),
     )
     return (beam_ids, beam_d, expanded, visited), trace
 
@@ -244,8 +286,9 @@ def _init_state(q, entry, vectors, cfg: SearchConfig, n_words,
 
 
 @partial(jax.jit, static_argnames=("cfg", "trace", "dfl_cfg"))
-def _search_batch(vectors, adj, fee, queries, entries, *, cfg: SearchConfig,
-                  trace: bool, dfl_cfg: dfl.DfloatConfig | None = None):
+def _search_batch(vectors, adj, fee, tombstone, queries, entries, *,
+                  cfg: SearchConfig, trace: bool,
+                  dfl_cfg: dfl.DfloatConfig | None = None):
     """Top-level jitted batch search.
 
     ``vectors``/``adj`` are *arguments*, not closure constants, so XLA keys
@@ -253,6 +296,9 @@ def _search_batch(vectors, adj, fee, queries, entries, *, cfg: SearchConfig,
     index — or re-creating a searcher — never re-traces or re-lowers.
     ``vectors`` is the packed (N, W) uint32 bitstream when
     ``cfg.storage == "packed"`` (``dfl_cfg`` supplies the static layout).
+    ``tombstone`` is the optional dead-row bitmap ((ceil(N/32),) uint32, or
+    None for an immutable index — None flattens to nothing, so the static
+    jit key distinguishes the two shapes of program).
     """
     n_words = -(-vectors.shape[0] // 32)
 
@@ -260,7 +306,8 @@ def _search_batch(vectors, adj, fee, queries, entries, *, cfg: SearchConfig,
         state = _init_state(q, entry, vectors, cfg, n_words, dfl_cfg)
         if trace:
             def step(s, _):
-                s, t = _hop_body(s, vectors, adj, q, fee, cfg, dfl_cfg)
+                s, t = _hop_body(s, vectors, adj, q, fee, cfg, dfl_cfg,
+                                 tombstone)
                 return s, t
             state, traces = jax.lax.scan(step, state, None, length=cfg.hops())
         else:
@@ -268,11 +315,14 @@ def _search_batch(vectors, adj, fee, queries, entries, *, cfg: SearchConfig,
                 _, beam_d, expanded, _ = s
                 return ((~expanded) & (beam_d < BIG)).any()
             def body(s):
-                s, _ = _hop_body(s, vectors, adj, q, fee, cfg, dfl_cfg)
+                s, _ = _hop_body(s, vectors, adj, q, fee, cfg, dfl_cfg,
+                                 tombstone)
                 return s
             state = jax.lax.while_loop(cond, body, state)
             traces = None
         beam_ids, beam_d, _, _ = state
+        if tombstone is not None:
+            beam_ids, beam_d = exclude_dead(beam_ids, beam_d, tombstone)
         out = dict(ids=beam_ids[: cfg.k], dists=beam_d[: cfg.k])
         if trace:
             out["trace"] = traces
@@ -286,7 +336,7 @@ def _search_batch(vectors, adj, fee, queries, entries, *, cfg: SearchConfig,
 
 def make_searcher(vectors, adj, cfg: SearchConfig,
                   fee: FeeParams | dict | None = None, trace: bool = False, *,
-                  dfloat_cfg: dfl.DfloatConfig | None = None):
+                  dfloat_cfg: dfl.DfloatConfig | None = None, tombstone=None):
     """Returns search(queries (Q,D), entries (Q,)) -> dict of results.
 
     vectors/adj may be numpy; they are passed to one shared top-level jitted
@@ -294,7 +344,8 @@ def make_searcher(vectors, adj, cfg: SearchConfig,
     ``cfg.storage == "packed"``, ``vectors`` is the (N, W) uint32 Dfloat
     bitstream and ``dfloat_cfg`` (static, hashable) describes its layout.
     ``fee`` takes a typed :class:`FeeParams`; legacy alpha/beta/margin dicts
-    are coerced.
+    are coerced.  ``tombstone`` ((ceil(N/32),) uint32, bit = dead row) masks
+    deleted rows out of scoring and results (streaming-mutation snapshots).
     """
     if cfg.storage == "packed" and dfloat_cfg is None:
         raise ValueError('cfg.storage="packed" requires dfloat_cfg=DfloatConfig')
@@ -305,9 +356,14 @@ def make_searcher(vectors, adj, cfg: SearchConfig,
         raise ValueError("cfg.use_fee=True requires fee=FeeParams(...) "
                          "(use FeeParams.identity(n_seg) for plain d_part exit)")
     dfl_cfg = dfloat_cfg if cfg.storage == "packed" else None
+    if tombstone is not None:
+        tombstone = jnp.asarray(tombstone, jnp.uint32)
+        if tombstone.shape != (-(-vectors.shape[0] // 32),):
+            raise ValueError(f"tombstone shape {tombstone.shape} does not "
+                             f"cover {vectors.shape[0]} rows")
 
     def search(queries, entries):
-        return _search_batch(vectors, adj, fp, jnp.asarray(queries),
+        return _search_batch(vectors, adj, fp, tombstone, jnp.asarray(queries),
                              jnp.asarray(entries), cfg=cfg, trace=trace,
                              dfl_cfg=dfl_cfg)
 
@@ -367,7 +423,7 @@ def descend_entry(vectors, graph, queries, metric: str) -> np.ndarray:
 def search_graph(vectors, graph, queries, cfg: SearchConfig,
                  fee: FeeParams | dict | None = None, trace: bool = False,
                  dfloat_cfg: dfl.DfloatConfig | None = None,
-                 descent_vectors=None) -> dict:
+                 descent_vectors=None, tombstone=None) -> dict:
     """Descend to base entries, run base-layer search; numpy result dict.
 
     With ``cfg.storage == "packed"``, ``vectors`` is the packed bitstream and
@@ -384,7 +440,8 @@ def search_graph(vectors, graph, queries, cfg: SearchConfig,
         descent_vectors = vectors if descent_vectors is None else descent_vectors
     entries = descend_entry(descent_vectors, graph, queries, cfg.metric)
     searcher = make_searcher(vectors, graph.base_adjacency, cfg,
-                             fee=fee, trace=trace, dfloat_cfg=dfloat_cfg)
+                             fee=fee, trace=trace, dfloat_cfg=dfloat_cfg,
+                             tombstone=tombstone)
     out = searcher(jnp.asarray(queries), jnp.asarray(entries))
     return {k: np.asarray(v) if not isinstance(v, dict) else {kk: np.asarray(vv) for kk, vv in v.items()}
             for k, v in out.items()}

@@ -100,7 +100,8 @@ def db_shardings(mesh: Mesh):
 def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
                           fee: FeeParams | dict | None = None,
                           n_bits_log2: int = 23, *,
-                          dfloat_cfg: dfl.DfloatConfig | None = None):
+                          dfloat_cfg: dfl.DfloatConfig | None = None,
+                          tombstone=None):
     """Returns search(db: ShardedDB, queries (Q, d), entries (Q,)) — a jit'd
     shard_map program for ``mesh`` (axes: optional pod, data, model).
 
@@ -108,7 +109,11 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
     ``cfg.storage == "packed"`` the ShardedDB holds packed uint32 rows and
     each shard scores its local partition straight from the bitstream
     (``dfloat_cfg`` supplies the static layout) — one shard's HBM slice holds
-    ~3x more vectors than the f32 layout."""
+    ~3x more vectors than the f32 layout.  ``tombstone``
+    ((ceil(n_total/32),) uint32, bit = dead row) is replicated on every shard
+    — unlike the visited bitmap it is indexed by *true* global id, never
+    hashed — and folds dead rows into the FEE exit mask before the all-gather
+    so they contribute neither distance work nor collective payload value."""
     model_axis = "model" if "model" in mesh.axis_names else mesh.axis_names[-1]
     data_axes = tuple(n for n in mesh.axis_names if n != model_axis)
     fp = FeeParams.coerce(fee)
@@ -117,6 +122,11 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
     packed = cfg.storage == "packed"
     if packed and dfloat_cfg is None:
         raise ValueError('cfg.storage="packed" requires dfloat_cfg=DfloatConfig')
+    if tombstone is not None:
+        tombstone = jnp.asarray(tombstone, jnp.uint32)
+        if tombstone.shape != (-(-n_total // 32),):
+            raise ValueError(f"tombstone shape {tombstone.shape} does not "
+                             f"cover {n_total} rows")
     n_bits = min(1 << n_bits_log2, 1 << int(np.ceil(np.log2(max(n_total, 2)))))
     n_words = n_bits // 32
     mask_bits = n_bits - 1
@@ -153,6 +163,12 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
             slots, gids, fresh = slots[keep], gids[keep], fresh[keep]
         gids = jnp.where(fresh, gids, -1)
 
+        # tombstone check by true global id (the visited bitmap is hashed,
+        # the tombstone never is): dead lanes exit the FEE pipeline before
+        # the first segment and ride the all-gather as BIG/-1 filler.
+        alive = (None if tombstone is None
+                 else ~search_mod.tombstone_lookup(tombstone, gids))
+
         threshold = beam_d[-1]
         tgt = vec_loc[jnp.maximum(slots, 0)]   # (L, d) / (L, W) local gather
         if cfg.use_fee:
@@ -160,17 +176,19 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
                 score, rejected, _segs = kops.fee_distance_packed(
                     q, tgt, threshold, fp.alpha, fp.beta, fp.margin,
                     dfloat_cfg=dfloat_cfg, seg=cfg.seg, metric=cfg.metric,
-                    backend=cfg.fee_backend)
+                    backend=cfg.fee_backend, lane_mask=alive)
             else:
                 score, rejected, _segs = kops.fee_distance(
                     q, tgt, threshold, fp.alpha, fp.beta, fp.margin,
-                    seg=cfg.seg, metric=cfg.metric, backend=cfg.fee_backend)
+                    seg=cfg.seg, metric=cfg.metric, backend=cfg.fee_backend,
+                    lane_mask=alive)
         else:
             if packed:
                 tgt = kops.dfloat_unpack_rows(tgt, dfloat_cfg,
                                               backend=cfg.fee_backend)
             score = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
-            rejected = jnp.zeros(tgt.shape[0], bool)
+            rejected = (jnp.zeros(tgt.shape[0], bool) if alive is None
+                        else ~alive)
         cand_d = jnp.where(fresh & ~rejected, score, BIG)
 
         # ---- the tiny merge: all_gather (id, dist) pairs over the DB axis
@@ -209,7 +227,11 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
 
         state = jax.lax.while_loop(
             cond, lambda s: hop(s, vec_loc, ids_loc, padj_loc, q), state)
-        return state[0][: cfg.k], state[1][: cfg.k]
+        beam_ids, beam_d = state[0], state[1]
+        if tombstone is not None:
+            beam_ids, beam_d = search_mod.exclude_dead(beam_ids, beam_d,
+                                                       tombstone)
+        return beam_ids[: cfg.k], beam_d[: cfg.k]
 
     def _entry_vec(vec_loc, ids_loc, entry):
         """Entry vector lives on one shard; fetch via masked psum (tiny).

@@ -60,11 +60,16 @@ def save(ckpt_dir: str | Path, step: int, tree, metadata: dict | None = None,
     return None
 
 
-def latest_step(base_dir: str | Path) -> int | None:
+def steps(base_dir: str | Path) -> list[int]:
+    """All completed checkpoint steps under ``base_dir``, ascending.
+
+    Used by restart logic (``latest_step``) and by the streaming-mutation
+    delta log, which replays *every* segment in order, not just the newest.
+    """
     base = Path(base_dir)
     if not base.exists():
-        return None
-    steps = []
+        return []
+    out = []
     for d in base.iterdir():
         # a crash can leave a half-written ``step_N.tmp`` behind (the writer
         # renames it into place only on completion) — never resume from one
@@ -73,8 +78,13 @@ def latest_step(base_dir: str | Path) -> int | None:
             continue
         suffix = d.name.split("_", 1)[1]
         if suffix.isdigit():
-            steps.append(int(suffix))
-    return max(steps) if steps else None
+            out.append(int(suffix))
+    return sorted(out)
+
+
+def latest_step(base_dir: str | Path) -> int | None:
+    all_steps = steps(base_dir)
+    return all_steps[-1] if all_steps else None
 
 
 def restore(ckpt_dir: str | Path, abstract_tree, shardings=None):

@@ -23,6 +23,10 @@ consumes per-hop multi-node traces).
 With ``storage="packed"`` the hierarchy-descent stage still scores f32 rows,
 but only the tiny upper-level subsets are ever emulated — the full ``db_q``
 array is never materialized on host or device.
+
+Streaming-mutation snapshots (``repro.streaming.MutableIndex.freeze``) carry
+a tombstone bitmap and a generation counter; every backend masks tombstoned
+rows out of scoring/results and stamps ``SearchResult.generation``.
 """
 from __future__ import annotations
 
@@ -97,14 +101,17 @@ def local_searcher(index, params: SearchParams, *, fee=None):
     searcher = search_mod.make_searcher(
         index.device_db(params.use_dfloat, params.storage),
         index.device_adjacency(), cfg, fee=_fee(index, params, fee),
-        trace=params.trace, dfloat_cfg=_dfloat_cfg(index, params))
+        trace=params.trace, dfloat_cfg=_dfloat_cfg(index, params),
+        tombstone=index.device_tombstone())
     rows = _descent_rows(index, params)
 
     def run(queries) -> SearchResult:
         qr = index.transform_queries(np.asarray(queries))
         entries = search_mod.descend_entry(rows, index.graph, qr, index.metric)
-        return SearchResult.from_raw(searcher(jnp.asarray(qr),
-                                              jnp.asarray(entries)))
+        res = SearchResult.from_raw(searcher(jnp.asarray(qr),
+                                             jnp.asarray(entries)))
+        res.generation = index.generation
+        return res
 
     return run
 
@@ -144,7 +151,8 @@ def sharded_searcher(index, params: SearchParams, *, mesh=None,
         searcher = rt.make_sharded_searcher(mesh, cfg, index.n,
                                             fee=_fee(index, params, fee),
                                             n_bits_log2=n_bits_log2,
-                                            dfloat_cfg=_dfloat_cfg(index, params))
+                                            dfloat_cfg=_dfloat_cfg(index, params),
+                                            tombstone=index.tombstone)
         sh = rt.db_shardings(mesh)
         sdb = rt.build_sharded_db(vectors, dam)
         sdb = rt.ShardedDB(*(jax.device_put(getattr(sdb, f), getattr(sh, f))
@@ -156,7 +164,8 @@ def sharded_searcher(index, params: SearchParams, *, mesh=None,
         entries = search_mod.descend_entry(rows, index.graph, qr, index.metric)
         with compat.set_mesh(mesh):
             ids, dists = searcher(sdb, jnp.asarray(qr), jnp.asarray(entries))
-        return SearchResult(ids=np.asarray(ids), dists=np.asarray(dists))
+        return SearchResult(ids=np.asarray(ids), dists=np.asarray(dists),
+                            generation=index.generation)
 
     return run
 
@@ -187,6 +196,15 @@ def ndpsim_searcher(index, params: SearchParams, *, hw=None, flags=None,
         res = local(queries)
         res.sim = simulate_ndp(res, owner, index.graph.base_adjacency, hw,
                                flags, dfloat_cfg, index.seg)
+        mut = (index.timings or {}).get("mutation")
+        if mut:
+            # streaming snapshot: append/repair traffic rides along as
+            # write-burst accounting next to the read-side projection
+            from repro.ndpsim.engine import account_writes
+
+            res.sim.writes = account_writes(
+                mut, index.dfloat_cfg, hw,
+                index.graph.base_adjacency.shape[1])
         return res
 
     return run

@@ -38,6 +38,8 @@ from repro.index import backends as backends_mod
 from repro.index.types import FeeFit, IndexSpec, SearchParams, SearchResult
 
 FORMAT_VERSION = 2          # v2 dropped the persisted db_q copy
+DELTA_FORMAT_VERSION = 3    # v3: streaming-mutation delta segments (WAL),
+                            # written *alongside* a v2 base by repro.streaming
 KNOWN_FORMATS = (1, 2)
 
 
@@ -58,6 +60,12 @@ class Index:
     db_rot: np.ndarray            # PCA-rotated DB (f32, pre-quantization)
     db_packed: np.ndarray         # real bitstream (uint32) — canonical payload
     timings: dict = dataclasses.field(default_factory=dict)
+    # dead-row bitmap ((ceil(n/32),) uint32, bit = tombstoned or unallocated
+    # capacity-tail slot).  None for an ordinary immutable index; set on
+    # snapshots frozen out of a ``repro.streaming.MutableIndex``.
+    tombstone: np.ndarray | None = None
+    # snapshot generation of a streaming MutableIndex (None = not a snapshot)
+    generation: int | None = None
     _db_q: np.ndarray | None = dataclasses.field(default=None, repr=False,
                                                  compare=False)
     _searchers: dict = dataclasses.field(default_factory=dict, repr=False,
@@ -79,6 +87,18 @@ class Index:
     @property
     def n(self) -> int:
         return self.db_rot.shape[0]
+
+    @property
+    def n_alive(self) -> int:
+        """Rows that can appear in results (``n`` minus tombstoned/tail)."""
+        if self.tombstone is None:
+            return self.n
+        # popcount over the bitmap words (O(n/32)), masking bits >= n
+        words = self.tombstone[: -(-self.n // 32)].copy()
+        tail_bits = self.n & 31
+        if tail_bits:
+            words[-1] &= np.uint32((1 << tail_bits) - 1)
+        return self.n - int(np.bitwise_count(words).sum())
 
     @property
     def dim(self) -> int:
@@ -128,6 +148,15 @@ class Index:
             self._device["adj"] = jnp.asarray(self.graph.base_adjacency,
                                               jnp.int32)
         return self._device["adj"]
+
+    def device_tombstone(self):
+        import jax.numpy as jnp
+
+        if self.tombstone is None:
+            return None
+        if "tombstone" not in self._device:
+            self._device["tombstone"] = jnp.asarray(self.tombstone, jnp.uint32)
+        return self._device["tombstone"]
 
     # -- build --------------------------------------------------------------
     @classmethod
@@ -221,6 +250,8 @@ class Index:
                        n_levels=len(self.graph.levels)),
             timings=self.timings,
         )
+        if self.generation is not None:
+            meta["generation"] = self.generation
         (path / "spec.json").write_text(json.dumps(meta, indent=1))
         arrays = dict(
             spca_mean=self.spca.mean, spca_components=self.spca.components,
@@ -231,6 +262,10 @@ class Index:
             # from db_rot + the Dfloat layout (or by decoding db_packed)
             db_rot=self.db_rot, db_packed=self.db_packed,
         )
+        if self.tombstone is not None:
+            # still format v2: readers without streaming support simply see
+            # an extra optional array (dead rows then reappear in results)
+            arrays["tombstone"] = self.tombstone
         for i, (ids, adj) in enumerate(self.graph.levels):
             arrays[f"g_ids{i}"] = ids
             arrays[f"g_adj{i}"] = adj
@@ -240,9 +275,26 @@ class Index:
     @classmethod
     def load(cls, path: str | Path) -> "Index":
         path = Path(path)
+        if not (path / "spec.json").exists():
+            hint = (" (found manifest.json — this looks like a checkpoint or "
+                    "streaming delta segment, not an index directory; delta "
+                    "segments are replayed via repro.streaming.MutableIndex"
+                    ".load on the *base* index directory)"
+                    if (path / "manifest.json").exists() else "")
+            raise ValueError(f"{path} is not a naszip index directory: "
+                             f"no spec.json{hint}")
         meta = json.loads((path / "spec.json").read_text())
-        if meta["format_version"] not in KNOWN_FORMATS:
-            raise ValueError(f"unsupported index format {meta['format_version']}")
+        version = meta.get("format_version")
+        if version not in KNOWN_FORMATS:
+            hint = (" (a v3 artifact is a streaming delta segment and only "
+                    "ever appears under <index>/delta/ — load the index "
+                    "directory with repro.streaming.MutableIndex.load)"
+                    if version == DELTA_FORMAT_VERSION else
+                    " — written by a newer naszip; upgrade this package to "
+                    "read it")
+            raise ValueError(
+                f"unsupported index format v{version} at {path}: this build "
+                f"reads formats {KNOWN_FORMATS}{hint}")
         spec = IndexSpec(**meta["spec"])
         with np.load(path / "arrays.npz", allow_pickle=False) as z:
             a = {k: z[k] for k in z.files}
@@ -266,6 +318,8 @@ class Index:
         return cls(spec=spec, spca=spca, fee=fee, dfloat_cfg=dfloat_cfg,
                    graph=graph, db_rot=a["db_rot"], db_packed=a["db_packed"],
                    timings=meta.get("timings", {}),
+                   tombstone=a.get("tombstone"),
+                   generation=meta.get("generation"),
                    # v1 artifacts carried the derived copy; seed the cache
                    _db_q=a.get("db_q"))
 

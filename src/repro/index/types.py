@@ -90,7 +90,10 @@ class SearchResult:
 
     ``ids``/``dists`` are (Q, k) numpy arrays.  Trace statistics are present
     only when the search ran with ``SearchParams.trace``; ``sim`` is the
-    timing-model projection attached by the ``ndpsim`` backend.
+    timing-model projection attached by the ``ndpsim`` backend;
+    ``generation`` is the streaming-mutation snapshot generation that served
+    the query (None when the index is not a ``MutableIndex`` snapshot) — a
+    serving tier logs it to correlate results with the write stream.
     """
 
     ids: np.ndarray
@@ -100,6 +103,7 @@ class SearchResult:
     dims: np.ndarray | None = None       # (Q,)
     trace: dict | None = None            # per-hop arrays (node/nbrs/segs/...)
     sim: Any = None                      # ndpsim.SimResult (ndpsim backend)
+    generation: int | None = None        # MutableIndex snapshot generation
 
     @classmethod
     def from_raw(cls, out: dict) -> "SearchResult":

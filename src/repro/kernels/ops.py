@@ -29,43 +29,70 @@ def _use_ref(backend: str) -> bool:
     return backend == "jnp" or (backend == "auto" and not _on_tpu())
 
 
+def _fold_lane_mask(out, lane_mask):
+    """Fold an alive-lane mask into the FEE exit outputs.
+
+    On the real VPE the tombstone bitmap is resident on-chip and is ANDed into
+    the exit flags before the first burst is issued, so a dead lane streams
+    zero bursts; here that contract is expressed on the kernel outputs —
+    dead lanes come back rejected with ``segs_used == 0`` (the value the
+    traffic/energy models account), whatever the backend computed.
+    """
+    if lane_mask is None:
+        return out
+    import jax.numpy as jnp
+
+    dist, rejected, segs_used = out
+    return (dist, rejected | ~lane_mask,
+            jnp.where(lane_mask, segs_used, 0).astype(segs_used.dtype))
+
+
 def fee_distance(q, x, threshold, alpha, beta, margin, *, seg: int,
-                 metric: str = "l2", backend: str = "auto", tile_c: int = 128):
+                 metric: str = "l2", backend: str = "auto", tile_c: int = 128,
+                 lane_mask=None):
     """VPE datapath: early-exit distance of candidates ``x`` vs query ``q``.
 
     Returns (dist, rejected, segs_used); dist is partial for rejected lanes.
+    ``lane_mask`` (bool (C,), False = tombstoned lane) joins the exit mask
+    before any segment is charged.
     """
     if _use_ref(backend):
-        return ref_ops.fee_distance_ref(q, x, threshold, alpha, beta, margin,
-                                        seg=seg, metric=metric)
-    if backend == "pallas_skip_dma":
-        return fee_distance_skipdma_pallas(q, x, threshold, alpha, beta,
-                                           margin, seg=seg, metric=metric,
-                                           tile_c=tile_c,
-                                           interpret=not _on_tpu())
-    return fee_distance_pallas(q, x, threshold, alpha, beta, margin, seg=seg,
-                               metric=metric, tile_c=tile_c,
-                               interpret=not _on_tpu())
+        out = ref_ops.fee_distance_ref(q, x, threshold, alpha, beta, margin,
+                                       seg=seg, metric=metric)
+    elif backend == "pallas_skip_dma":
+        out = fee_distance_skipdma_pallas(q, x, threshold, alpha, beta,
+                                          margin, seg=seg, metric=metric,
+                                          tile_c=tile_c,
+                                          interpret=not _on_tpu())
+    else:
+        out = fee_distance_pallas(q, x, threshold, alpha, beta, margin,
+                                  seg=seg, metric=metric, tile_c=tile_c,
+                                  interpret=not _on_tpu())
+    return _fold_lane_mask(out, lane_mask)
 
 
 def fee_distance_packed(q, xp, threshold, alpha, beta, margin, *,
                         dfloat_cfg: dfl.DfloatConfig, seg: int,
                         metric: str = "l2", backend: str = "auto",
-                        tile_c: int = 128):
+                        tile_c: int = 128, lane_mask=None):
     """Fused Dfloat-decode + early-exit distance straight from the packed
     uint32 bitstream (``xp`` (C, W)) — the packed-native scoring hot path.
 
     Bit-compatible with :func:`fee_distance` over ``dfloat.emulate_db`` data.
+    ``lane_mask`` behaves as in :func:`fee_distance`.
     """
     if _use_ref(backend):
-        return ref_ops.fee_distance_packed_ref(q, xp, threshold, alpha, beta,
-                                               margin, dfloat_cfg=dfloat_cfg,
-                                               seg=seg, metric=metric)
-    return fee_distance_packed_pallas(q, xp, threshold, alpha, beta, margin,
-                                      dfloat_cfg=dfloat_cfg, seg=seg,
-                                      metric=metric, tile_c=tile_c,
-                                      interpret=not _on_tpu(),
-                                      skip_dma=backend == "pallas_skip_dma")
+        out = ref_ops.fee_distance_packed_ref(q, xp, threshold, alpha, beta,
+                                              margin, dfloat_cfg=dfloat_cfg,
+                                              seg=seg, metric=metric)
+    else:
+        out = fee_distance_packed_pallas(q, xp, threshold, alpha, beta,
+                                         margin, dfloat_cfg=dfloat_cfg,
+                                         seg=seg, metric=metric,
+                                         tile_c=tile_c,
+                                         interpret=not _on_tpu(),
+                                         skip_dma=backend == "pallas_skip_dma")
+    return _fold_lane_mask(out, lane_mask)
 
 
 def dfloat_unpack_rows(packed, cfg: dfl.DfloatConfig, *,

@@ -1,4 +1,6 @@
 """Trace-driven DIMM-NDP performance model (UniNDP stand-in, §VI-A)."""
 from repro.ndpsim.cache import SetAssocCache  # noqa: F401
-from repro.ndpsim.engine import SimFlags, SimResult, simulate_ndp, simulate_platform  # noqa: F401
+from repro.ndpsim.engine import (  # noqa: F401
+    SimFlags, SimResult, WriteStats, account_writes, compressed_list_bytes,
+    simulate_ndp, simulate_platform)
 from repro.ndpsim import timing  # noqa: F401

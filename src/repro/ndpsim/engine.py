@@ -58,6 +58,10 @@ class SimFlags:
     lnc: bool = True          # local neighbor cache (§V-D)
     prefetch: bool = True     # next-hop list prefetch (§V-E)
     batch: int = 16
+    # neighbor-list storage: "varint" = the paper's sorted delta + varint
+    # codes (what closes Fig. 20's list-traffic gap vs dense 4B ids);
+    # "dense" = plain 4B ids (the pre-compression accounting, kept for A/B)
+    list_compression: str = "varint"
 
 
 @dataclasses.dataclass
@@ -75,6 +79,7 @@ class SimResult:
     idle_frac: float          # earliest-finishing sub-channel idle share
     dram_bytes_per_query: float
     energy_uj_per_query: float
+    writes: "WriteStats | None" = None  # mutation write traffic (streaming)
 
     def breakdown(self):
         tot = self.t_neighbor_us + self.t_distance_us + self.t_partial_us
@@ -84,6 +89,48 @@ class SimResult:
 
 def _list_bytes(n_entries: int) -> int:
     return 4 * max(n_entries, 1)  # 4B per neighbor id (Fig. 12b)
+
+
+# ---------------------------------------------------------------------------
+# delta/varint neighbor-list compression (paper's list coding; Fig. 20)
+# ---------------------------------------------------------------------------
+
+
+def varint_bytes(vals) -> np.ndarray:
+    """LEB128 bytes per value (7 payload bits/byte, minimum 1)."""
+    v = np.maximum(np.asarray(vals, np.int64), 0)
+    nbits = np.ones_like(v)
+    nz = v > 0
+    nbits[nz] = np.floor(np.log2(v[nz])).astype(np.int64) + 1
+    return np.maximum(1, -(-nbits // 7))
+
+
+def _delta_coded_bytes(rows: np.ndarray, vals: np.ndarray, n_rows: int,
+                       empty_bytes: int = 1) -> np.ndarray:
+    """Bytes of each row's sorted-delta + varint coded list.
+
+    ``rows``/``vals`` are the (row, id) pairs of every list member; per row
+    the ids are sorted, the first is varint-coded absolute and the rest as
+    deltas, plus one count byte — the coding the NasZip list streamer decodes
+    burst-by-burst.  Fully vectorized (one lexsort over all members).
+    """
+    out = np.full(n_rows, empty_bytes, np.int64)
+    if len(rows) == 0:
+        return out
+    order = np.lexsort((vals, rows))
+    r, v = rows[order], vals[order]
+    first = np.r_[True, r[1:] != r[:-1]]
+    coded = np.where(first, v, v - np.r_[0, v[:-1]])
+    np.add.at(out, r, varint_bytes(coded))
+    return out
+
+
+def compressed_list_bytes(adj: np.ndarray) -> np.ndarray:
+    """Per-node delta/varint bytes of the full (unpartitioned) neighbor list
+    — shared by the non-DaM engine path and the Fig. 20 traffic benchmark."""
+    rows, cols = np.nonzero(adj >= 0)
+    return _delta_coded_bytes(rows, adj[rows, cols].astype(np.int64),
+                              adj.shape[0])
 
 
 def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
@@ -109,12 +156,34 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
         part_size[c] = ((nb_owner == c) & (adj >= 0)).sum(1)
     full_size = (adj >= 0).sum(1)
 
+    # per-(channel, node) stored list bytes: the paper's sorted delta +
+    # varint coding of the partition's *local slot* ids (small, dense id
+    # space -> 1-2B deltas), or plain 4B ids for the pre-compression A/B
+    varint = flags.list_compression == "varint"
+    if flags.list_compression not in ("varint", "dense"):
+        raise ValueError(f"list_compression={flags.list_compression!r}")
+    if varint:
+        local_of = np.zeros(n_nodes, np.int64)
+        for c in range(n_sub):
+            ids_c = np.nonzero(owner == c)[0]
+            local_of[ids_c] = np.arange(len(ids_c))
+        part_lb = np.empty((n_sub, n_nodes), np.int64)
+        for c in range(n_sub):
+            rows, cols = np.nonzero((nb_owner == c) & (adj >= 0))
+            part_lb[c] = _delta_coded_bytes(rows, local_of[adj[rows, cols]],
+                                            n_nodes)
+        full_lb = compressed_list_bytes(adj)
+    else:
+        part_lb = np.maximum(4 * part_size, 4).astype(np.int64)
+        full_lb = np.array([_list_bytes(s) for s in full_size], np.int64)
+
     # address maps: per-channel NLT (4B/node) + list heap; vectors separate
     list_base = 16 * n_nodes  # leave NLT region [0, 4*N) distinct per channel
     part_addr = np.zeros((n_sub, n_nodes), np.int64)
     for c in range(n_sub):
-        part_addr[c] = list_base + np.concatenate([[0], np.cumsum(_list_bytes(0) + 4 * part_size[c][:-1])])
-    full_addr = list_base + np.arange(n_nodes, dtype=np.int64) * (4 * adj.shape[1])
+        part_addr[c] = list_base + np.concatenate(
+            [[0], np.cumsum(part_lb[c][:-1])])
+    full_addr = list_base + np.concatenate([[0], np.cumsum(full_lb[:-1])])
 
     lnc_t = [SetAssocCache(hw.lnc_t_bytes, hw.line_bytes) for _ in range(n_sub)]
     lnc_d = [SetAssocCache(hw.lnc_d_bytes, hw.line_bytes, hw.lnc_ways_d) for _ in range(n_sub)]
@@ -176,7 +245,7 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
                             psz = int(part_size[c, v])
                             if psz == 0:
                                 continue
-                            lbytes = _list_bytes(psz)
+                            lbytes = int(part_lb[c, v])
                             if flags.prefetch:
                                 # a "hit" = the next-hop list is on-chip when the
                                 # hop starts: either predicted exactly, or still
@@ -206,7 +275,7 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
                     # "index lookup" — on the critical path, not parallel)
                     for v in vs:
                         c = int(owner[v])
-                        lbytes = _list_bytes(int(full_size[v]))
+                        lbytes = int(full_lb[v])
                         lines = -(-lbytes // hw.line_bytes)
                         t = hw.host_nlt_lookup_ns + hw.t_row_open_ns + lines * t_burst
                         host_ns += t
@@ -220,6 +289,10 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
                 for j in np.nonzero(mask)[0]:
                     cid = int(cand[j])
                     s_used = int(segs[q, h, j])
+                    if s_used == 0:
+                        # tombstoned lane: the sub-channel's resident bitmap
+                        # vetoes the stream before the first burst
+                        continue
                     n_grp = int(burst_groups[s_used])      # 64B burst groups
                     stream = hw.t_row_open_ns + n_grp * t_burst
                     compute = s_used * feats_per_seg * t_feat
@@ -270,7 +343,7 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
                             if flags.lnc:
                                 lnc_t[c].fill(4 * p, 4)
                                 lnc_d[c].fill(int(part_addr[c, p]),
-                                              _list_bytes(int(part_size[c, p])))
+                                              int(part_lb[c, p]))
                 # prefetch DRAM streams overlap the merge window
                 pf_ns = 0.0
 
@@ -303,6 +376,75 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
         dram_bytes_per_query=dram_bytes / n_q,
         energy_uj_per_query=energy_pj * 1e-6 / n_q,
     )
+
+
+# ---------------------------------------------------------------------------
+# streaming mutation — append/repair traffic as DRAM write bursts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class WriteStats:
+    """DRAM write-side accounting of a streaming mutation workload."""
+
+    rows_appended: int
+    rows_deleted: int
+    edge_writes: int            # adjacency rows rewritten (insert + repair)
+    vector_write_bytes: float   # packed-row appends (burst-aligned groups)
+    list_write_bytes: float     # adjacency read-modify-writes
+    tombstone_write_bytes: float
+    dram_bytes: float
+    write_burst_groups: int
+    t_write_us: float
+    energy_uj: float
+
+    def per_append_us(self) -> float:
+        return self.t_write_us / max(self.rows_appended, 1)
+
+
+def account_writes(stats, dfloat_cfg: DfloatConfig, hw: NDPConfig,
+                   m_width: int, list_bytes_per_row: float | None = None
+                   ) -> WriteStats:
+    """Model append/repair traffic as sub-channel write bursts.
+
+    * an append streams one burst-aligned packed row into the reserved tail:
+      ``row_burst_groups()`` 64B groups, the sub-channel's devices in
+      lockstep (layout rule 4) — the write-side mirror of the read path;
+    * an adjacency rewrite is a read-modify-write of one stored list,
+      rounded to 64B lines — pass ``list_bytes_per_row`` (e.g. the measured
+      delta/varint average) to model compressed stored lists, else dense
+      ``4 * m_width`` ids are assumed;
+    * a tombstone flip dirties one line (an upper bound — the counters don't
+      retain the id stream needed to dedup lines).
+
+    ``stats`` is duck-typed (``repro.streaming.MutationStats`` or the dict
+    snapshot a frozen Index carries in ``timings["mutation"]``).
+    """
+    if isinstance(stats, dict):
+        appended, deleted, edges = (stats.get("rows_appended", 0),
+                                    stats.get("rows_deleted", 0),
+                                    stats.get("edge_writes", 0))
+    else:
+        appended, deleted, edges = (stats.rows_appended, stats.rows_deleted,
+                                    stats.edge_writes)
+    vec_groups = appended * dfloat_cfg.row_burst_groups()
+    vec_bytes = float(vec_groups * hw.burst_bytes)
+    lb = 4 * m_width if list_bytes_per_row is None else list_bytes_per_row
+    list_lines = edges * -(-int(lb) // hw.line_bytes)
+    list_bytes = float(list_lines * hw.line_bytes)
+    tomb_bytes = float(deleted * hw.line_bytes)
+    total = vec_bytes + list_bytes + tomb_bytes
+    groups = int(vec_groups + -(-int(list_bytes + tomb_bytes)
+                                // hw.burst_bytes))
+    t_ns = ((appended + edges + deleted) * hw.t_row_open_ns
+            + groups * hw.t_burst_ns)
+    return WriteStats(
+        rows_appended=int(appended), rows_deleted=int(deleted),
+        edge_writes=int(edges), vector_write_bytes=vec_bytes,
+        list_write_bytes=list_bytes, tombstone_write_bytes=tomb_bytes,
+        dram_bytes=total, write_burst_groups=groups,
+        t_write_us=t_ns * 1e-3,
+        energy_uj=total * 8 * hw.e_dram_pj_per_bit * 1e-6)
 
 
 def simulate_platform(traces, dim: int, hw: PlatformConfig,

@@ -1,0 +1,18 @@
+"""Streaming mutation subsystem: live serving shards that take writes.
+
+``MutableIndex`` layers row-granular mutation on the immutable
+``repro.index.Index``:
+
+  * in-place packed appends — burst-aligned Dfloat rows written straight into
+    a pre-reserved ``db_packed`` capacity tail (doubling growth),
+  * tombstone deletes — O(1) bitmap flips, masked out of scoring via the FEE
+    exit mask, in-edges patched lazily,
+  * incremental graph repair — greedy descent + the offline build's own
+    occlusion prune over the candidate neighborhood,
+  * generation counter + copy-on-write ``freeze()`` snapshots, so searchers
+    serve one immutable generation race-free while writes land in the next,
+  * a WAL-style delta log (``save_delta`` / ``replay``): format-v3 segments
+    persisted via ``ft.checkpoint`` alongside the v2 base artifact.
+"""
+from repro.streaming.delta import read_segments  # noqa: F401
+from repro.streaming.mutable import MutableIndex, MutationStats  # noqa: F401

@@ -1,0 +1,166 @@
+"""WAL-style delta log: format-v3 segments alongside the v2 base artifact.
+
+Layout::
+
+    <path>/spec.json, arrays.npz      # the immutable base (index format v2)
+    <path>/delta/step_0/              # one ft.checkpoint dir per flush
+    <path>/delta/step_1/              #   arrays.npz: "<seq>.<kind>" -> array
+    ...                               #   manifest.json: metadata w/ v3 marker
+
+Each segment is an *ordered* batch of ops — ``append`` (raw input vectors),
+``delete`` (global ids), ``repair`` (the tombstones whose in-edge patching
+drained at a snapshot boundary; recording the drain point is what makes the
+lazily-repaired adjacency replay bit-identically).  Segments are written
+atomically by ``ft.checkpoint.save`` (tmp-dir + rename), so a crash mid-flush
+leaves the log readable at the previous segment; ``ft.checkpoint.steps``
+enumerates completed segments in order.
+
+The segment metadata also pins the writer's structural knobs (``ef_build``,
+``sub_batch``) — candidate search width and sub-batch boundaries shape the
+repaired graph, so replay restores them per segment before applying ops.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.ft import checkpoint as ckpt
+from repro.index.index import DELTA_FORMAT_VERSION, KNOWN_FORMATS
+
+SEGMENT_KIND = "naszip-delta"
+
+
+def _op_key(i: int, kind: str) -> str:
+    return f"{i:06d}.{kind}"
+
+
+def _spec_dict(mindex) -> dict:
+    import dataclasses
+
+    return dataclasses.asdict(mindex.spec)
+
+
+def segment_metadata(path: str | Path):
+    """Yield each segment's metadata dict, in log order (manifest-only)."""
+    delta_dir = Path(path) / "delta"
+    for step in ckpt.steps(delta_dir):
+        manifest = json.loads(
+            (delta_dir / f"step_{step}" / "manifest.json").read_text())
+        yield manifest.get("metadata", {})
+
+
+def base_fingerprint(index) -> str:
+    """Cheap content digest of a base index: shape/spec fields plus sampled
+    packed rows.  Recorded in every delta segment and re-checked at replay,
+    so a WAL can never be silently applied to the wrong base."""
+    n = index.n
+    sample = index.db_packed[:: max(1, n // 64)]
+    h = hashlib.sha1()
+    h.update(f"{n}/{index.dim}/{index.metric}/{index.graph.entry}".encode())
+    h.update(np.ascontiguousarray(sample).tobytes())
+    return h.hexdigest()[:16]
+
+
+def save_delta(mindex, path: str | Path) -> Path:
+    """Persist ``mindex``'s base (once) + its un-flushed WAL as one segment.
+
+    The log is bound to one directory: once a flush (or a replay) has
+    consumed part of the WAL, saving to a *different* path would silently
+    produce a log missing those earlier segments, so it is rejected.
+    """
+    path = Path(path)
+    bound = getattr(mindex, "_delta_path", None)
+    if bound is not None and Path(bound).resolve() != path.resolve():
+        raise ValueError(
+            f"delta log is bound to {bound} (earlier segments live there); "
+            f"cannot save_delta to {path} — the flushed ops are no longer "
+            "in memory")
+    if not (path / "spec.json").exists():
+        mindex.base.save(path)
+    else:
+        meta = json.loads((path / "spec.json").read_text())
+        if meta.get("format_version") not in KNOWN_FORMATS:
+            raise ValueError(f"{path} holds an unreadable base "
+                             f"(format v{meta.get('format_version')})")
+        # the dir pre-exists: never silently adopt a foreign base — compare
+        # the recorded fingerprint of existing segments (manifest-only read)
+        # or, absent any, the base spec itself
+        first = next(iter(segment_metadata(path)), None)
+        if first is not None:
+            if first.get("base_fingerprint") != base_fingerprint(mindex.base):
+                raise ValueError(
+                    f"{path} holds a delta log for a different base index "
+                    "(fingerprint mismatch); refusing to append")
+        elif meta.get("spec") != _spec_dict(mindex):
+            raise ValueError(
+                f"{path} holds an index built from a different spec; "
+                "refusing to append a delta log to a foreign base")
+    if not mindex._wal:
+        return path
+    delta_dir = path / "delta"
+    done = ckpt.steps(delta_dir)
+    seq = (done[-1] + 1) if done else 0
+    if seq < mindex._delta_seq:
+        seq = mindex._delta_seq
+    ops = {_op_key(i, kind): np.asarray(arr)
+           for i, (kind, arr) in enumerate(mindex._wal)}
+    ckpt.save(delta_dir / f"step_{seq}", step=seq, tree=ops,
+              metadata=dict(format_version=DELTA_FORMAT_VERSION,
+                            kind=SEGMENT_KIND, n_ops=len(ops),
+                            generation=mindex.generation,
+                            ef_build=mindex.ef_build,
+                            sub_batch=mindex.sub_batch,
+                            relink_floor=mindex.relink_floor,
+                            base_fingerprint=base_fingerprint(mindex.base)))
+    mindex._wal.clear()
+    mindex._delta_seq = seq + 1
+    mindex._delta_path = path
+    return path
+
+
+def read_segments(path: str | Path):
+    """Yield ``(metadata, [(kind, array), ...])`` per segment, in log order."""
+    delta_dir = Path(path) / "delta"
+    for step in ckpt.steps(delta_dir):
+        seg = delta_dir / f"step_{step}"
+        manifest = json.loads((seg / "manifest.json").read_text())
+        md = manifest.get("metadata", {})
+        if (md.get("format_version") != DELTA_FORMAT_VERSION
+                or md.get("kind") != SEGMENT_KIND):
+            raise ValueError(
+                f"{seg} is not a v{DELTA_FORMAT_VERSION} naszip delta segment "
+                f"(metadata {md.get('kind')!r} v{md.get('format_version')})")
+        tree, _ = ckpt.restore(seg, {k: 0 for k in manifest["keys"]})
+        ops = [(k.split(".", 1)[1], np.asarray(tree[k])) for k in sorted(tree)]
+        yield md, ops
+
+
+def replay(mindex, path: str | Path) -> int:
+    """Apply every delta segment at ``path`` to ``mindex``, in order.
+
+    Segments record a fingerprint of the base they were logged against;
+    a WAL pointed at the wrong base fails loudly instead of replaying into
+    silently wrong results.
+    """
+    fp = base_fingerprint(mindex.base)
+    n_ops = 0
+    for md, ops in read_segments(path):
+        seg_fp = md.get("base_fingerprint")
+        if seg_fp is not None and seg_fp != fp:
+            raise ValueError(
+                f"delta log at {path} was recorded against a different base "
+                f"index (fingerprint {seg_fp} != {fp})")
+        mindex.ef_build = int(md.get("ef_build", mindex.ef_build))
+        mindex.sub_batch = int(md.get("sub_batch", mindex.sub_batch))
+        mindex.relink_floor = int(md.get("relink_floor", mindex.relink_floor))
+        for kind, arr in ops:
+            mindex._apply(kind, arr)
+            n_ops += 1
+    done = ckpt.steps(Path(path) / "delta")
+    mindex._delta_seq = done[-1] + 1 if done else 0
+    if done:
+        mindex._delta_path = Path(path)
+    return n_ops

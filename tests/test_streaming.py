@@ -1,0 +1,311 @@
+"""Streaming mutation subsystem: churn equivalence, tombstone exclusion,
+snapshot isolation, WAL delta round trips, and the v3 format guards.
+
+The churn-equivalence property: after a random interleaving of appends,
+deletes and searches, a ``MutableIndex`` must (a) never surface a tombstoned
+id on any backend, (b) reach recall@10 within 1pt of a fresh ``Index.build``
+over the surviving rows at equal ``ef`` (both metrics), (c) score packed
+storage bit-identically to f32, and (d) replay its WAL bit-identically.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import exact_topk, recall_at_k
+from repro.index import Index, IndexSpec, SearchParams
+from repro.streaming import MutableIndex
+
+EF = 64
+K = 10
+
+
+def _overlap(a, b, k=K):
+    return float(np.mean([len(set(x.tolist()) & set(y.tolist())) / k
+                          for x, y in zip(a, b)]))
+
+
+def _churn(db, index, seed=0, frac=0.10, searches=2):
+    """Random interleaving of append/delete/search ops; returns the mutated
+    index plus the id bookkeeping needed for the equivalence checks."""
+    mi = MutableIndex(index, ef_build=64, sub_batch=64)
+    rng = np.random.default_rng(seed)
+    n_app = n_del = int(db.n * frac)
+    app_chunks = np.array_split(rng.integers(0, db.n, n_app), 4)
+    dead_pool = rng.choice(db.n, n_del, replace=False)
+    del_chunks = np.array_split(dead_pool, 4)
+    ops = (["append"] * len(app_chunks) + ["delete"] * len(del_chunks)
+           + ["search"] * searches)
+    rng.shuffle(ops)
+    new_ids = []
+    ai = di = 0
+    for op in ops:
+        if op == "append":
+            src = app_chunks[ai]
+            ai += 1
+            noise = 0.05 * rng.standard_normal(
+                (len(src), db.dim)).astype(np.float32)
+            vecs = db.vectors[src] + noise
+            if db.metric == "ip":
+                vecs /= np.linalg.norm(vecs, axis=1, keepdims=True) + 1e-9
+            new_ids.append(mi.append(vecs))
+        elif op == "delete":
+            mi.delete(del_chunks[di])
+            di += 1
+        else:
+            # searching mid-churn freezes a snapshot (and drains repairs)
+            mi.search(db.queries[:8], SearchParams(ef=32, k=K,
+                                                   use_dfloat=False))
+    return mi, np.concatenate(new_ids), dead_pool
+
+
+@pytest.fixture(scope="module", params=["l2", "ip"])
+def churned(request, unit_db, unit_ip_db, unit_index, unit_ip_index):
+    db, idx = ((unit_db, unit_index) if request.param == "l2"
+               else (unit_ip_db, unit_ip_index))
+    mi, new_ids, dead = _churn(db, idx, seed=3)
+    surv = mi.alive_ids()
+    gt = surv[exact_topk(mi._rot[surv], mi.spca.transform(db.queries), K,
+                         db.metric)]
+    return db, mi, new_ids, dead, surv, gt
+
+
+def test_churn_recall_within_1pt_of_rebuild(churned):
+    """Acceptance: 10% appends + 10% deletes, recall@10 within 1pt of a
+    fresh build over the surviving rows at equal ef."""
+    db, mi, new_ids, dead, surv, gt = churned
+    params = SearchParams(ef=EF, k=K, use_dfloat=False)
+    res = mi.search(db.queries, params)
+    rec = recall_at_k(res.ids, gt, K)
+
+    from repro.data.synthetic import VecDB
+
+    # rebuild over the *same* surviving rows, in stable-id order, so both
+    # engines index one corpus; appended rows only exist rotated — invert
+    # the (orthogonal) sPCA rotation to recover their raw form
+    raw = np.empty((len(surv), db.dim), np.float32)
+    base_mask = surv < db.n
+    raw[base_mask] = db.vectors[surv[base_mask]]
+    raw[~base_mask] = (mi._rot[surv[~base_mask]]
+                       @ mi.spca.components.T.astype(np.float32)
+                       + mi.spca.mean.astype(np.float32))
+    db2 = VecDB(f"{db.name}-surv", raw, db.queries, db.train_queries,
+                db.metric, db.gt)
+    idx2 = Index.build(db2, IndexSpec.for_db(db2, m=8,
+                                             dfloat_recall_target=None),
+                       cache_key=f"surv/{db.name}/churn-eq")
+    res2 = idx2.search(db.queries, params)
+    rec2 = recall_at_k(surv[res2.ids], gt, K)   # rebuild ids -> stable ids
+    assert rec >= rec2 - 0.01, (rec, rec2)
+    assert rec >= 0.9, rec
+
+
+def test_churn_tombstones_never_in_results_all_backends(churned):
+    import jax
+
+    db, mi, new_ids, dead, surv, gt = churned
+    params = SearchParams(ef=EF, k=K, use_dfloat=False)
+    frozen = mi.freeze()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    runs = dict(
+        local=frozen.searcher("local", params),
+        sharded=frozen.searcher("sharded", params, mesh=mesh),
+        ndpsim=frozen.searcher("ndpsim", params),
+    )
+    ref = None
+    all_dead = np.nonzero(mi._dead[: mi.capacity])[0]
+    for name, run in runs.items():
+        res = run(db.queries[:64])
+        assert not np.isin(res.ids, all_dead).any(), name
+        assert res.generation == mi.generation, name
+        if ref is None:
+            ref = res.ids
+        else:
+            assert _overlap(res.ids, ref) >= 0.9, name
+    # ndpsim snapshot carries the write-burst accounting
+    sim = runs["ndpsim"](db.queries[:16]).sim
+    assert sim.writes is not None and sim.writes.rows_appended == len(new_ids)
+
+
+def test_churn_packed_bitstream_identical_to_f32(churned):
+    """Packed-native scoring of the mutated (in-place appended) bitstream is
+    bit-identical to f32 over the emulated view — appends included."""
+    db, mi, *_ = churned
+    pf = SearchParams(ef=48, k=K, storage="f32", use_dfloat=True)
+    pp = SearchParams(ef=48, k=K, storage="packed")
+    a = mi.search(db.queries, pf)
+    b = mi.search(db.queries, pp)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.dists, b.dists)
+
+
+def test_delta_log_replay_bit_identical(churned, tmp_path):
+    """save_delta -> load -> replay reproduces arrays and results exactly."""
+    db, mi, *_ = churned
+    path = mi.save_delta(tmp_path / "churn.naszip")
+    m2 = MutableIndex.load(path)
+    assert m2.generation == mi.generation
+    np.testing.assert_array_equal(mi._adj[: mi.n], m2._adj[: m2.n])
+    np.testing.assert_array_equal(mi._packed[: mi.n], m2._packed[: m2.n])
+    np.testing.assert_array_equal(mi._dead[: mi.n], m2._dead[: m2.n])
+    params = SearchParams(ef=EF, k=K, use_dfloat=False)
+    a, b = mi.search(db.queries, params), m2.search(db.queries, params)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.dists, b.dists)
+
+
+def test_delta_log_appends_across_flushes(unit_db, unit_index, tmp_path):
+    mi = MutableIndex(unit_index, ef_build=32)
+    rng = np.random.default_rng(7)
+    path = tmp_path / "wal.naszip"
+    mi.append(unit_db.vectors[rng.integers(0, unit_db.n, 16)])
+    mi.save_delta(path)
+    mi.delete(rng.choice(unit_db.n, 8, replace=False))
+    mi.save_delta(path)
+    mi.save_delta(path)                       # empty flush is a no-op
+    assert sorted(p.name for p in (path / "delta").iterdir()) == [
+        "step_0", "step_1"]
+    m2 = MutableIndex.load(path)
+    a = mi.search(unit_db.queries[:16], SearchParams(k=K, use_dfloat=False))
+    b = m2.search(unit_db.queries[:16], SearchParams(k=K, use_dfloat=False))
+    np.testing.assert_array_equal(a.ids, b.ids)
+
+
+def test_snapshot_isolation_across_generations(unit_db, unit_index):
+    """A frozen generation serves identical results while later writes land."""
+    mi = MutableIndex(unit_index, ef_build=32)
+    rng = np.random.default_rng(11)
+    mi.append(unit_db.vectors[rng.integers(0, unit_db.n, 32)])
+    snap = mi.freeze()
+    params = SearchParams(ef=48, k=K, use_dfloat=False)
+    before = snap.searcher("local", params)(unit_db.queries[:32])
+    mi.append(unit_db.vectors[rng.integers(0, unit_db.n, 32)])
+    mi.delete(rng.choice(unit_db.n, 64, replace=False))
+    mi.freeze()                               # drains repair, COW adjacency
+    after = snap.searcher("local", params)(unit_db.queries[:32])
+    np.testing.assert_array_equal(before.ids, after.ids)
+    np.testing.assert_array_equal(before.dists, after.dists)
+    assert before.generation == snap.generation != mi.generation
+
+
+def test_capacity_doubling_keeps_ids_and_payload(unit_db, unit_index):
+    from repro.core import dfloat as dfl
+
+    mi = MutableIndex(unit_index, reserve=0.01, ef_build=32)
+    cap0 = mi.capacity
+    rng = np.random.default_rng(5)
+    vecs = unit_db.vectors[rng.integers(0, unit_db.n, 128)]
+    ids = mi.append(vecs)
+    assert mi.capacity > cap0                  # doubled at least once
+    assert ids[0] == unit_index.n and mi.n == unit_index.n + 128
+    np.testing.assert_array_equal(
+        mi._packed[ids], dfl.pack_db(mi.spca.transform(vecs), mi.dfloat_cfg))
+    np.testing.assert_array_equal(mi._packed[: unit_index.n],
+                                  unit_index.db_packed)
+
+
+def test_delete_is_lazy_and_idempotent(unit_db, unit_index):
+    mi = MutableIndex(unit_index, ef_build=32)
+    assert mi.delete([3, 4, 5]) == 3
+    assert mi.delete([3, 4]) == 0              # idempotent
+    assert mi.n_alive == unit_index.n - 3
+    assert list(mi.is_deleted([3, 4, 5, 6])) == [True, True, True, False]
+    assert len(mi._pending_repair) == 3        # not yet patched
+    mi.freeze()
+    assert mi._pending_repair == []            # drained at the boundary
+    assert mi.stats.repairs_drained == 3
+    with pytest.raises(ValueError):
+        mi.delete([unit_index.n + 10_000])
+
+
+def test_deleted_entry_never_leaks_even_with_underfull_beam(unit_db,
+                                                            unit_index):
+    """The graph entry is seeded into the beam unconditionally (it stays
+    navigable when deleted); with ef == k there is no slack to rank it out,
+    so the final re-rank must blank its id, not just its distance."""
+    mi = MutableIndex(unit_index, ef_build=32)
+    entry = unit_index.graph.entry
+    mi.delete([entry])
+    res = mi.search(unit_db.queries[:32], SearchParams(ef=K, k=K,
+                                                       use_dfloat=False))
+    assert not (res.ids == entry).any()
+    assert (res.dists < BIG_ / 2).all() or (res.ids[res.dists > BIG_ / 2]
+                                            == -1).all()
+
+
+BIG_ = 3.0e38
+
+
+def test_delta_log_is_bound_to_one_path(unit_db, unit_index, tmp_path):
+    """After a flush, saving to a different directory would silently drop the
+    already-flushed segments — it must be rejected instead."""
+    mi = MutableIndex(unit_index, ef_build=32)
+    mi.append(unit_db.vectors[:4])
+    mi.save_delta(tmp_path / "a.naszip")
+    mi.delete([0])
+    with pytest.raises(ValueError, match="bound"):
+        mi.save_delta(tmp_path / "b.naszip")
+    mi.save_delta(tmp_path / "a.naszip")   # the bound path still works
+    m2 = MutableIndex.load(tmp_path / "a.naszip")
+    assert m2.is_deleted([0])[0] and m2.n == mi.n
+
+
+def test_delta_log_rejects_foreign_base(unit_db, unit_index, unit_ip_index,
+                                        tmp_path):
+    """A WAL must never be appended to, or replayed onto, a different base."""
+    path = tmp_path / "x.naszip"
+    unit_ip_index.save(path)               # foreign base already on disk
+    mi = MutableIndex(unit_index, ef_build=32)
+    mi.append(unit_db.vectors[:4])
+    with pytest.raises(ValueError, match="foreign|different"):
+        mi.save_delta(path)
+    p2 = mi.save_delta(tmp_path / "y.naszip")
+    m2 = MutableIndex(unit_ip_index, ef_build=32)
+    with pytest.raises(ValueError, match="fingerprint"):
+        m2.replay(p2)
+
+
+def test_mutable_index_guards(unit_index):
+    frozen = MutableIndex(unit_index, ef_build=32).freeze()
+    with pytest.raises(ValueError):
+        MutableIndex(frozen)                   # wrap the base, not a snapshot
+    with pytest.raises(ValueError):
+        MutableIndex(unit_index).append(np.zeros((2, 3), np.float32))
+
+
+def test_index_load_guards_delta_segments(unit_db, unit_index, tmp_path):
+    """Satellite: Index.load fails clearly on future/delta artifacts."""
+    mi = MutableIndex(unit_index, ef_build=32)
+    mi.append(unit_db.vectors[:4])
+    path = mi.save_delta(tmp_path / "guard.naszip")
+    with pytest.raises(ValueError, match="delta segment"):
+        Index.load(path / "delta" / "step_0")
+    spec = path / "spec.json"
+    spec.write_text(spec.read_text().replace('"format_version": 2',
+                                             '"format_version": 3'))
+    with pytest.raises(ValueError, match="v3"):
+        Index.load(path)
+    spec.write_text(spec.read_text().replace('"format_version": 3',
+                                             '"format_version": 99'))
+    with pytest.raises(ValueError, match="formats \\(1, 2\\)"):
+        Index.load(path)
+    with pytest.raises(ValueError, match="spec.json"):
+        Index.load(tmp_path / "nowhere")
+
+
+def test_frozen_snapshot_save_load_round_trip(unit_db, unit_index, tmp_path):
+    """A mutated snapshot persists (format v2 + tombstone array) and serves
+    identical results after reload."""
+    mi = MutableIndex(unit_index, ef_build=32)
+    rng = np.random.default_rng(13)
+    mi.append(unit_db.vectors[rng.integers(0, unit_db.n, 24)])
+    mi.delete(rng.choice(unit_db.n, 24, replace=False))
+    frozen = mi.freeze()
+    loaded = Index.load(frozen.save(tmp_path / "snap.naszip"))
+    assert loaded.generation == frozen.generation
+    assert loaded.n_alive == frozen.n_alive
+    params = SearchParams(ef=48, k=K, use_dfloat=False)
+    a = frozen.searcher("local", params)(unit_db.queries[:32])
+    b = loaded.searcher("local", params)(unit_db.queries[:32])
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.dists, b.dists)
