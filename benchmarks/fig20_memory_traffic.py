@@ -11,8 +11,9 @@ import numpy as np
 
 from benchmarks.common import get_index, get_traces
 from repro.core import baselines as bl
+from repro.core.graph import map_owners
 from repro.data.synthetic import recall_at_k
-from repro.ndpsim import compressed_list_bytes
+from repro.ndpsim import compressed_list_bytes, tree_merge_bytes
 
 DATASETS = ("sift", "msmarco")
 
@@ -77,10 +78,34 @@ def main(csv):
                          + hnsw_list_pq)
             pq_bytes, pq_rec, n_sub = pq_traffic(db, idx, db.gt, db.queries[:24])
             base = hnsw_bytes
+            # inter-channel partial-result merge: flat (every channel ships
+            # all accepts to the host) vs the log-C pairwise tree with
+            # per-link top-``width`` truncation — same per-hop accepted sets
+            from repro.ndpsim.timing import NASZIP_2CH
+
+            n_ch = NASZIP_2CH.n_subchannels
+            owner = map_owners(db.n, n_ch)
+            cand_d = out.trace["cand_d"]
+            nb = out.trace["nbrs"]
+            acc = (nb >= 0) & (cand_d < 1e37)
+            flat_b = 8.0 * acc.sum()
+            tree_b = 0.0
+            for qi in range(acc.shape[0]):
+                for h in range(acc.shape[1]):
+                    lanes = nb[qi, h][acc[qi, h]]
+                    if len(lanes):
+                        tree_b += tree_merge_bytes(
+                            np.bincount(owner[lanes], minlength=n_ch), 64)
+            n_q = acc.shape[0]
             print(f"{name:9s} hnsw=1.00  pq={pq_bytes/base:.2f} (m={n_sub}, "
                   f"rec={pq_rec:.2f})  rabitq~={rbq_bytes/base:.2f}  "
                   f"vdzip={vdzip_bytes/base:.2f} (recall={rec:.3f})")
+            print(f"{'':9s} merge/query: flat={flat_b/n_q:.0f}B "
+                  f"tree={tree_b/n_q:.0f}B "
+                  f"(tree/flat={tree_b/max(flat_b, 1):.2f})")
             return dict(pq=round(pq_bytes / base, 2),
                         rabitq=round(rbq_bytes / base, 2),
-                        vdzip=round(vdzip_bytes / base, 2))
+                        vdzip=round(vdzip_bytes / base, 2),
+                        merge_flat_bytes_per_query=round(flat_b / n_q, 1),
+                        merge_tree_bytes_per_query=round(tree_b / n_q, 1))
         csv.timed(f"fig20_{name}", run)

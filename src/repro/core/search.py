@@ -73,10 +73,18 @@ class SearchConfig:
     expand: int = 4             # beam entries popped per hop (frontier batch)
     fee_backend: str = "auto"   # kernels.ops dispatch: auto | jnp | pallas[...]
     storage: str = "f32"        # base vectors: dense f32 | packed Dfloat words
+    # fraction of the expand*M frontier batch retained by the fresh-first
+    # compaction (lane budget L = max(M, expand*M*compact)).  1.0 keeps every
+    # fresh lane — a pure reorder, no drops — which is what makes the
+    # owner-sharded backend bit-identical to the local one; 0.5 (default)
+    # halves the scoring/merge width at recall parity (tests/test_expand.py)
+    compact: float = 0.5
 
     def __post_init__(self):
         if self.expand < 1:
             raise ValueError(f"expand must be >= 1, got {self.expand}")
+        if not 0.0 < self.compact <= 1.0:
+            raise ValueError(f"compact must be in (0, 1], got {self.compact}")
         if self.fee_backend not in FEE_BACKENDS:
             raise ValueError(f"fee_backend={self.fee_backend!r}; expected one "
                              f"of {FEE_BACKENDS}")
@@ -120,6 +128,31 @@ def first_occurrence_mask(ids, valid):
     sk = key[order]
     firsts = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
     return jnp.zeros((n,), bool).at[order].set(firsts) & valid
+
+
+def compact_width(m: int, e: int, compact: float = 0.5) -> int:
+    """Lane budget after the fresh-first frontier compaction of one hop.
+
+    ``m`` is the (per-shard) neighbor-list width, ``e`` the frontier batch
+    size; ``compact`` is :attr:`SearchConfig.compact`.  ``expand == 1`` hops
+    skip compaction entirely (L = M); ``compact == 1.0`` makes the compaction
+    a pure stable reorder (no fresh lane is ever dropped).
+    """
+    return m if e <= 1 else max(m, int(e * m * compact))
+
+
+def local_topk_reduce(cand_ids, cand_d, r: int):
+    """Shard-local top-``r`` reduce before the cross-shard owner merge.
+
+    Exactness: with ``r >= min(ef, lanes)`` the truncation cannot change the
+    merged beam — a candidate enters the post-merge top-ef only if fewer than
+    ef elements of (beam ∪ all candidates) beat it, and a lane outside its own
+    shard's top-ef already has >= ef better lanes on that shard alone.  So
+    ``top_ef(beam ∪ C) == top_ef(beam ∪ top_ef(C))`` shard by shard, and the
+    collective ships r lanes per shard instead of the full padded batch.
+    """
+    neg_d, order = jax.lax.top_k(-cand_d, r)
+    return cand_ids[order], -neg_d
 
 
 def pop_frontier(beam_ids, beam_d, expanded, e: int):
@@ -233,7 +266,7 @@ def _hop_body(state, vectors, adj, q, fee: FeeParams | None, cfg: SearchConfig,
     # they stay discoverable through other parents on later hops (recall
     # parity holds; see tests/test_expand.py).
     if e > 1:
-        l = max(m, (e * m) // 2)
+        l = compact_width(m, e, cfg.compact)
         _, keep = jax.lax.top_k(fresh.astype(jnp.float32), l)
         nbrs, safe, fresh = nbrs[keep], safe[keep], fresh[keep]
         w, bit = safe >> 5, (jnp.uint32(1) << (safe & 31).astype(jnp.uint32))

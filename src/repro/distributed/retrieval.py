@@ -1,22 +1,44 @@
-"""NasZip retrieval as a shard_map program over the production mesh.
+"""NasZip retrieval as a query-owner-sharded shard_map program.
 
-This is the paper's DaM (Fig. 12) mapped onto a TPU pod (DESIGN.md §4):
+This is the paper's DaM (Fig. 12) mapped onto a device mesh (DESIGN.md §4),
+redesigned around *query ownership* and communication/compute overlap:
 
   * the vector DB is row-sharded over the ``model`` axis — one shard = one
-    "sub-channel"; its HBM slice plays the role of the sub-channel DRAM;
-  * the adjacency is stored PRE-PARTITIONED BY OWNER: shard c holds, for
-    every node v, the sub-list of v's neighbors that shard c owns (as local
-    slot ids).  Expanding v therefore needs no vector movement — every shard
-    gathers + scores only its local partition (the NLT analogue is the dense
-    per-shard row indexing);
-  * per-hop merge = all_gather of (global_id, dist) pairs (C x Mc tiny) +
-    identical replicated beam update on every shard — the paper's shared
-    priority queue / host merge, reduced to a tiny collective;
-  * queries are sharded over the ``data`` axes (query batches = the paper's
-    batch scheduler).
+    "sub-channel"; the adjacency is stored PRE-PARTITIONED BY OWNER: shard c
+    holds, for every node v, the sub-list of v's neighbors that c owns, as
+    **local slot ids** (the per-shard NLT analogue);
+  * each query is *owned* by exactly one model shard: its beam, frontier and
+    output state live only there.  Nothing about a query is replicated on the
+    model axis except the per-hop frontier broadcast (``expand`` node ids and
+    one threshold — a few dozen bytes);
+  * the per-shard visited set is an **exact** bitmap over the shard's local
+    slots (O(n_loc/32) words per resident query) — the old replicated hashed
+    2^bits bitmap, its Bloom-style false visits, and its O(2^bits) per-shard
+    state are gone;
+  * per hop: the owner pops its frontier and broadcasts (all_gather of E ids
+    + the beam threshold); every shard gathers + FEE-scores its local
+    partitions and reduces them to a shard-local top-r (r = min(L, ef), which
+    is provably lossless — see ``core.search.local_topk_reduce``); one
+    ``all_to_all`` then delivers each shard's r lanes *to the owner only* —
+    O(ef) lanes per query instead of the old flat C x L all-gather landing on
+    every shard;
+  * tombstones are per-shard words indexed by local slot, folded into the
+    FEE lane mask before the first segment is streamed — the full replicated
+    bitmap is gone too (streaming churn updates only the owning shard's
+    words);
+  * ``overlap=True`` double-buffers the pipeline: hop t's collective is in
+    flight while the owner merges hop t-1's arrivals, and shards score
+    against the *previous* threshold.  Stale-threshold scoring is safe — the
+    FEE exit test is monotone in the threshold, so it only admits extra
+    lanes, never drops one the synchronous hop keeps (re-filtered on arrival
+    by the owner's top-k merge; see ``kernels.ops.fee_distance_stale``).
 
-The visited set is a hashed bitmap (exact when 2^bits >= N, Bloom-style with
-negligible false-visit rate at billion scale) so the state is O(1) in DB size.
+In sync mode (``overlap=False``, the default) the program is bit-identical
+to the local backend whenever ``cfg.compact == 1.0`` (lossless frontier
+compaction): same admitted candidate sets, same visited marks, same top-k
+tie-breaks (beam wins).  With the default lossy compaction the two backends
+drop overflowing fresh lanes on different boundaries (per-shard vs global)
+and agree to recall parity instead.
 """
 from __future__ import annotations
 
@@ -44,12 +66,15 @@ class ShardedDB:
     """Abstract or concrete device-side DaM database layout.
 
     vectors   (C, n_loc, d)   row shards (axis 0 = model shard)
-    local_ids (C, n_loc)      global id of each local slot
+    local_ids (C, n_loc)      global id of each local slot (-1 pad)
     part_adj  (C, N, Mc)      per-shard neighbor partitions (local slots, -1 pad)
+    tombstone (C, W_loc)      per-shard dead-slot words (uint32, bit = local
+                              slot is tombstoned or padding), or None
     """
     vectors: object
     local_ids: object
     part_adj: object
+    tombstone: object | None = None
 
     @property
     def n_total(self) -> int:
@@ -66,12 +91,19 @@ def abstract_db(n: int, d: int, n_shards: int, m_part: int, dtype=jnp.float32) -
     )
 
 
-def build_sharded_db(vectors: np.ndarray, dam, dtype=None) -> ShardedDB:
+def build_sharded_db(vectors: np.ndarray, dam, dtype=None,
+                     tombstone: np.ndarray | None = None) -> ShardedDB:
     """Pack a core.graph.DaMPartition into the stacked device layout.
 
     ``vectors`` may be the dense float rows or the packed uint32 bitstream
     (row layout is identical either way); by default integer inputs keep
     their dtype and float inputs are cast to f32 (the pre-packed guarantee).
+
+    ``tombstone`` is the *global* packed dead-row bitmap of an Index
+    snapshot; it is re-folded here into per-shard words indexed by local
+    slot (padding slots are marked dead), so each shard's FEE lane mask
+    needs only its own O(n_loc/32) words — the replicated global bitmap
+    never reaches the devices.
     """
     c = dam.n_channels
     n_loc = max(len(ids) for ids in dam.local_ids)
@@ -85,7 +117,22 @@ def build_sharded_db(vectors: np.ndarray, dam, dtype=None) -> ShardedDB:
         vs[ch, : len(gl)] = vectors[gl]
         ids[ch, : len(gl)] = gl
     pa = np.stack(dam.part_adj)  # (C, N, Mc)
-    return ShardedDB(jnp.asarray(vs), jnp.asarray(ids), jnp.asarray(pa))
+    tomb = None
+    if tombstone is not None:
+        tombstone = np.asarray(tombstone, np.uint32)
+        w_loc = -(-n_loc // 32)
+        tomb = np.zeros((c, w_loc), np.uint32)
+        slot = np.arange(n_loc)
+        for ch, gl in enumerate(dam.local_ids):
+            dead = np.ones(n_loc, bool)                  # padding slots: dead
+            g = np.asarray(gl, np.int64)
+            bit = (tombstone[g >> 5] >> (g & 31).astype(np.uint32)) & 1
+            dead[: len(g)] = bit.astype(bool)
+            idx = slot[dead]
+            np.bitwise_or.at(tomb[ch], idx >> 5,
+                             np.uint32(1) << (idx & 31).astype(np.uint32))
+        tomb = jnp.asarray(tomb)
+    return ShardedDB(jnp.asarray(vs), jnp.asarray(ids), jnp.asarray(pa), tomb)
 
 
 def db_shardings(mesh: Mesh):
@@ -94,6 +141,30 @@ def db_shardings(mesh: Mesh):
         vectors=NamedSharding(mesh, P(model, None, None)),
         local_ids=NamedSharding(mesh, P(model, None)),
         part_adj=NamedSharding(mesh, P(model, None, None)),
+        tombstone=NamedSharding(mesh, P(model, None)),
+    )
+
+
+def collective_payload(cfg: SearchConfig, mc: int, c: int) -> dict:
+    """Per-query per-hop collective payload accounting (8B = id + dist lane).
+
+    ``flat_*`` is the legacy topology this module replaced: every shard
+    all-gathers its full padded L-lane batch to *every* shard.  ``hier_*``
+    is the owner-sharded topology: each shard ships its lossless top-r
+    (r = min(L, ef)) to the query's owner only, plus the tiny frontier
+    broadcast (E node ids + 1 threshold to C-1 shards).
+    """
+    e = max(1, min(cfg.expand, cfg.ef))
+    l = search_mod.compact_width(mc, e, cfg.compact)
+    r = min(l, cfg.ef)
+    frontier_bytes = 4 * (c - 1) * (e + 1)
+    return dict(
+        n_shards=c, expand=e, local_lanes=l, reduce_width=r,
+        flat_lanes_per_query=c * l,        # lanes landing on EVERY shard
+        owner_lanes_per_query=c * r,       # lanes landing on the owner only
+        flat_fabric_bytes_per_query=8 * c * (c - 1) * l,
+        hier_fabric_bytes_per_query=8 * (c - 1) * r + frontier_bytes,
+        frontier_bytes_per_query=frontier_bytes,
     )
 
 
@@ -101,174 +172,270 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
                           fee: FeeParams | dict | None = None,
                           n_bits_log2: int = 23, *,
                           dfloat_cfg: dfl.DfloatConfig | None = None,
-                          tombstone=None):
+                          tombstone=None, overlap: bool = False):
     """Returns search(db: ShardedDB, queries (Q, d), entries (Q,)) — a jit'd
     shard_map program for ``mesh`` (axes: optional pod, data, model).
 
-    ``fee`` takes a typed :class:`FeeParams`.  With
-    ``cfg.storage == "packed"`` the ShardedDB holds packed uint32 rows and
-    each shard scores its local partition straight from the bitstream
-    (``dfloat_cfg`` supplies the static layout) — one shard's HBM slice holds
-    ~3x more vectors than the f32 layout.  ``tombstone``
-    ((ceil(n_total/32),) uint32, bit = dead row) is replicated on every shard
-    — unlike the visited bitmap it is indexed by *true* global id, never
-    hashed — and folds dead rows into the FEE exit mask before the all-gather
-    so they contribute neither distance work nor collective payload value."""
+    ``fee`` takes a typed :class:`FeeParams`.  With ``cfg.storage ==
+    "packed"`` the ShardedDB holds packed uint32 rows and each shard scores
+    its local partition straight from the bitstream (``dfloat_cfg`` supplies
+    the static layout).  ``tombstone`` is a flag: truthy means the ShardedDB
+    carries per-shard dead-slot words (``build_sharded_db(...,
+    tombstone=...)``) that fold into each shard's FEE lane mask.
+    ``overlap=True`` selects the double-buffered pipeline (stale-threshold
+    scoring, one-hop-deferred merge; recall-equivalent, not bit-identical).
+
+    ``n_bits_log2`` is accepted for backwards compatibility and ignored: the
+    visited set is now an exact per-shard bitmap over local slots, so there
+    is no hash space to size.
+
+    Queries are padded by the wrapper to a multiple of (data x model) so
+    every model shard owns an equal chunk; results come back in input order.
+    """
+    del n_bits_log2
     model_axis = "model" if "model" in mesh.axis_names else mesh.axis_names[-1]
     data_axes = tuple(n for n in mesh.axis_names if n != model_axis)
+    c = mesh.shape[model_axis]
+    d_total = int(np.prod([mesh.shape[a] for a in data_axes]))
     fp = FeeParams.coerce(fee)
     if cfg.use_fee and fp is None:
         raise ValueError("cfg.use_fee=True requires fee=FeeParams(...)")
     packed = cfg.storage == "packed"
     if packed and dfloat_cfg is None:
         raise ValueError('cfg.storage="packed" requires dfloat_cfg=DfloatConfig')
-    if tombstone is not None:
-        tombstone = jnp.asarray(tombstone, jnp.uint32)
-        if tombstone.shape != (-(-n_total // 32),):
-            raise ValueError(f"tombstone shape {tombstone.shape} does not "
-                             f"cover {n_total} rows")
-    n_bits = min(1 << n_bits_log2, 1 << int(np.ceil(np.log2(max(n_total, 2)))))
-    n_words = n_bits // 32
-    mask_bits = n_bits - 1
+    has_tomb = bool(tombstone is not None and tombstone is not False)
+    e = min(cfg.expand, cfg.ef)
 
-    def hop(state, vec_loc, ids_loc, padj_loc, q):
-        beam_ids, beam_d, expanded, visited = state
-        e, mc = min(cfg.expand, beam_ids.shape[0]), padj_loc.shape[1]
-        # pop the `expand` nearest unexpanded entries; one hop now amortizes
-        # the cross-shard all_gather over E frontier nodes
-        vs, sel, expanded = search_mod.pop_frontier(beam_ids, beam_d,
-                                                    expanded, e)
+    def _slot_of(ids_loc, gid):
+        """Local slot of global id ``gid`` on this shard, -1 if not resident."""
+        slot = jnp.argmax(ids_loc == gid)
+        return jnp.where(ids_loc[slot] == gid, slot, -1)
 
-        # local partitions of all E neighbor lists (DaM lookup — per-shard NLT)
-        slots = padj_loc[jnp.maximum(vs, 0)].reshape(e * mc)  # local slots
-        valid = (slots >= 0) & jnp.repeat(sel, mc)
-        gids = jnp.where(valid, ids_loc[jnp.maximum(slots, 0)], -1)
-
-        # visited bitmap check (replicated, identical across shards)
-        hidx = (jnp.maximum(gids, 0) & mask_bits)
-        w = hidx >> 5
-        bit = jnp.uint32(1) << (hidx & 31).astype(jnp.uint32)
-        seen = (visited[w] & bit) != 0
-        fresh = valid & ~seen & first_occurrence_mask(gids, valid)
-
-        # ---- fresh-first compaction (expand > 1): the stale/dup lanes are
-        # dropped *before* the local gather+scoring and — more importantly at
-        # high shard counts — before the cross-shard all_gather, shrinking the
-        # per-hop collective payload from E*Mc to L = max(Mc, E*Mc/2) lanes
-        # per shard.  Same stable top_k partition (and the same recall
-        # argument for dropped overflow) as the local path.
-        if e > 1:
-            l = max(mc, (e * mc) // 2)
-            _, keep = jax.lax.top_k(fresh.astype(jnp.float32), l)
-            slots, gids, fresh = slots[keep], gids[keep], fresh[keep]
-        gids = jnp.where(fresh, gids, -1)
-
-        # tombstone check by true global id (the visited bitmap is hashed,
-        # the tombstone never is): dead lanes exit the FEE pipeline before
-        # the first segment and ride the all-gather as BIG/-1 filler.
-        alive = (None if tombstone is None
-                 else ~search_mod.tombstone_lookup(tombstone, gids))
-
-        threshold = beam_d[-1]
-        tgt = vec_loc[jnp.maximum(slots, 0)]   # (L, d) / (L, W) local gather
-        if cfg.use_fee:
-            if packed:
-                score, rejected, _segs = kops.fee_distance_packed(
-                    q, tgt, threshold, fp.alpha, fp.beta, fp.margin,
-                    dfloat_cfg=dfloat_cfg, seg=cfg.seg, metric=cfg.metric,
-                    backend=cfg.fee_backend, lane_mask=alive)
-            else:
-                score, rejected, _segs = kops.fee_distance(
-                    q, tgt, threshold, fp.alpha, fp.beta, fp.margin,
-                    seg=cfg.seg, metric=cfg.metric, backend=cfg.fee_backend,
-                    lane_mask=alive)
-        else:
-            if packed:
-                tgt = kops.dfloat_unpack_rows(tgt, dfloat_cfg,
-                                              backend=cfg.fee_backend)
-            score = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
-            rejected = (jnp.zeros(tgt.shape[0], bool) if alive is None
-                        else ~alive)
-        cand_d = jnp.where(fresh & ~rejected, score, BIG)
-
-        # ---- the tiny merge: all_gather (id, dist) pairs over the DB axis
-        all_ids = jax.lax.all_gather(gids, model_axis).reshape(-1)
-        all_d = jax.lax.all_gather(cand_d, model_axis).reshape(-1)
-
-        # replicated visited/beam update (identical on every shard).  The
-        # batch is deduped by *hashed* bit position, not raw id: two distinct
-        # ids colliding in the hash would otherwise both scatter-add the same
-        # bit, and the carry would corrupt the neighboring bit — dropping the
-        # second one is exactly the bitmap's documented Bloom-style
-        # false-visit, with the bitmap left intact.
-        ah = (jnp.maximum(all_ids, 0) & mask_bits)
-        aw, abit = ah >> 5, jnp.uint32(1) << (ah & 31).astype(jnp.uint32)
-        take = ((all_ids >= 0) & ((visited[aw] & abit) == 0)
-                & first_occurrence_mask(ah, all_ids >= 0))
-        visited = visited.at[aw].add(jnp.where(take, abit, jnp.uint32(0)))
-        all_d = jnp.where(take, all_d, BIG)
-
-        return (*search_mod.merge_beam(beam_ids, beam_d, expanded,
-                                       all_ids, all_d), visited)
-
-    def search_one(vec_loc, ids_loc, padj_loc, q, entry):
-        d0 = fee_mod.exact_distance(
-            q, _entry_vec(vec_loc, ids_loc, entry), metric=cfg.metric)[0]
-        beam_ids = jnp.full((cfg.ef,), -1, jnp.int32).at[0].set(entry)
-        beam_d = jnp.full((cfg.ef,), BIG).at[0].set(d0)
-        expanded = jnp.ones((cfg.ef,), bool).at[0].set(False)
-        visited = jnp.zeros((n_words,), jnp.uint32)
-        h = entry & mask_bits
-        visited = visited.at[h >> 5].set(jnp.uint32(1) << (h & 31).astype(jnp.uint32))
-        state = (beam_ids, beam_d, expanded, visited)
-
-        def cond(s):
-            return ((~s[2]) & (s[1] < BIG)).any()
-
-        state = jax.lax.while_loop(
-            cond, lambda s: hop(s, vec_loc, ids_loc, padj_loc, q), state)
-        beam_ids, beam_d = state[0], state[1]
-        if tombstone is not None:
-            beam_ids, beam_d = search_mod.exclude_dead(beam_ids, beam_d,
-                                                       tombstone)
-        return beam_ids[: cfg.k], beam_d[: cfg.k]
-
-    def _entry_vec(vec_loc, ids_loc, entry):
-        """Entry vector lives on one shard; fetch via masked psum (tiny).
-
-        Packed rows are decoded locally before the collective, so only one
-        shard contributes a non-zero f32 row either way."""
-        slot = jnp.argmax(ids_loc == entry)
-        mine = (ids_loc[slot] == entry)
-        row = vec_loc[slot]
+    def _decode_row(vec_loc, slot):
+        """This shard's f32 row for a local slot (0 when not resident)."""
+        row = vec_loc[jnp.maximum(slot, 0)]
         if packed:
             row = kops.dfloat_unpack_rows(row[None], dfloat_cfg,
                                           backend=cfg.fee_backend)[0]
-        v = jnp.where(mine, row, 0.0)
-        return jax.lax.psum(v, model_axis)[None]
+        return jnp.where(slot >= 0, row, 0.0)
 
-    def body(vectors, local_ids, part_adj, queries, entries):
-        # block shapes: vectors (1, n_loc, d); queries (Q_loc, d)
+    def _score_lanes(q, tgt, exit_thr, admit_thr, alive):
+        """(dist, admit) for one shard's gathered lanes — FEE exit against
+        ``exit_thr`` (stale in overlap mode), admit against ``admit_thr``."""
+        if cfg.use_fee:
+            dist, admit, _segs = kops.fee_distance_stale(
+                q, tgt, exit_thr, admit_thr, fp.alpha, fp.beta, fp.margin,
+                seg=cfg.seg, metric=cfg.metric, backend=cfg.fee_backend,
+                lane_mask=alive, dfloat_cfg=dfloat_cfg if packed else None)
+            return dist, admit
+        if packed:
+            tgt = kops.dfloat_unpack_rows(tgt, dfloat_cfg,
+                                          backend=cfg.fee_backend)
+        dist = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
+        admit = dist < admit_thr
+        if alive is not None:
+            admit &= alive
+        return dist, admit
+
+    def body(vectors, local_ids, part_adj, tomb, queries, entries):
+        # block shapes: vectors (1, n_loc, d); queries (Q_loc, d) — queries
+        # ride the data axes and are *replicated* over model; this shard owns
+        # the contiguous chunk [j*Q_own, (j+1)*Q_own) of them.
         vec_loc, ids_loc, padj_loc = vectors[0], local_ids[0], part_adj[0]
-        ids, dists = jax.vmap(
-            lambda q, e: search_one(vec_loc, ids_loc, padj_loc, q, e)
-        )(queries, entries)
-        return ids, dists
+        tomb_loc = None if tomb is None else tomb[0]
+        n_loc, mc = ids_loc.shape[0], padj_loc.shape[1]
+        w_loc = -(-n_loc // 32)
+        l = search_mod.compact_width(mc, e, cfg.compact)
+        r = min(l, cfg.ef)
+        q_loc = queries.shape[0]
+        q_own = q_loc // c
+        j = jax.lax.axis_index(model_axis)
+
+        # ---- seed: entry rows via one masked psum (each gid is resident on
+        # exactly one shard); per-shard exact visited bitmap marks the entry
+        slots0 = jax.vmap(partial(_slot_of, ids_loc))(entries)       # (Q_loc,)
+        rows0 = jax.lax.psum(jax.vmap(partial(_decode_row, vec_loc))(slots0),
+                             model_axis)                             # (Q_loc, d)
+        safe0 = jnp.maximum(slots0, 0)
+        bit0 = jnp.where(slots0 >= 0,
+                         jnp.uint32(1) << (safe0 & 31).astype(jnp.uint32),
+                         jnp.uint32(0))
+        visited = jnp.zeros((q_loc, w_loc), jnp.uint32)
+        visited = visited.at[jnp.arange(q_loc), safe0 >> 5].add(bit0)
+        if has_tomb:
+            dead_bit = (tomb_loc[safe0 >> 5] & bit0) != 0
+            entry_dead = jax.lax.psum(dead_bit.astype(jnp.int32),
+                                      model_axis) > 0                # (Q_loc,)
+
+        # ---- owner-only beam state for this shard's query chunk
+        my_q = jax.lax.dynamic_slice_in_dim(queries, j * q_own, q_own, 0)
+        my_ent = jax.lax.dynamic_slice_in_dim(entries, j * q_own, q_own, 0)
+        my_rows0 = jax.lax.dynamic_slice_in_dim(rows0, j * q_own, q_own, 0)
+        d0 = jax.vmap(lambda qv, rv: fee_mod.exact_distance(
+            qv, rv[None], metric=cfg.metric)[0])(my_q, my_rows0)
+        beam_ids = jnp.full((q_own, cfg.ef), -1, jnp.int32).at[:, 0].set(my_ent)
+        beam_d = jnp.full((q_own, cfg.ef), BIG).at[:, 0].set(d0)
+        expanded = jnp.ones((q_own, cfg.ef), bool).at[:, 0].set(False)
+
+        def score_local(q, nodes_q, sel_q, thr_q, vis_q):
+            """One query's local partition scoring -> shard-local top-r."""
+            slots = padj_loc[jnp.maximum(nodes_q, 0)].reshape(e * mc)
+            valid = (slots >= 0) & jnp.repeat(sel_q, mc)
+            safe = jnp.maximum(slots, 0)
+            w = safe >> 5
+            bit = jnp.uint32(1) << (safe & 31).astype(jnp.uint32)
+            seen = (vis_q[w] & bit) != 0
+            # exact local-slot dedup/visited — no hashing, no false visits
+            fresh = valid & ~seen & first_occurrence_mask(slots, valid)
+            if e > 1:
+                # fresh-first compaction: same stable partition as the local
+                # hop, applied per shard (L = max(Mc, E*Mc*compact))
+                _, keep = jax.lax.top_k(fresh.astype(jnp.float32), l)
+                slots, safe, fresh = slots[keep], safe[keep], fresh[keep]
+                w = safe >> 5
+                bit = jnp.uint32(1) << (safe & 31).astype(jnp.uint32)
+            vis_q = vis_q.at[w].add(jnp.where(fresh, bit, jnp.uint32(0)))
+            alive = (None if tomb_loc is None
+                     else (tomb_loc[w] & bit) == 0)
+            dist, admit = _score_lanes(q, vec_loc[safe], thr_q, thr_q, alive)
+            cand_d = jnp.where(fresh & admit, dist, BIG)
+            gids = jnp.where(cand_d < BIG, ids_loc[safe], -1)
+            return *search_mod.local_topk_reduce(gids, cand_d, r), vis_q
+
+        def local_pass(nodes, sel, thr, visited):
+            """Broadcast the frontier, score local partitions everywhere,
+            deliver each shard's top-r to the owner (one all_to_all)."""
+            nodes_all = jax.lax.all_gather(nodes, model_axis).reshape(q_loc, e)
+            sel_all = jax.lax.all_gather(sel, model_axis).reshape(q_loc, e)
+            thr_all = jax.lax.all_gather(thr, model_axis).reshape(q_loc)
+            gids_r, d_r, visited = jax.vmap(score_local)(
+                queries, nodes_all, sel_all, thr_all, visited)
+            # owner-targeted delivery: shard j's lanes for owner i's queries
+            # go to shard i — O(C*r) lanes per owned query, not C*L everywhere
+            arr_ids = jax.lax.all_to_all(gids_r.reshape(c, q_own, r),
+                                         model_axis, 0, 0)
+            arr_d = jax.lax.all_to_all(d_r.reshape(c, q_own, r),
+                                       model_axis, 0, 0)
+            return (arr_ids.transpose(1, 0, 2).reshape(q_own, c * r),
+                    arr_d.transpose(1, 0, 2).reshape(q_own, c * r), visited)
+
+        def go_flag(beam_d, expanded, pend_d=None):
+            active = ((~expanded) & (beam_d < BIG)).any()
+            if pend_d is not None:
+                active |= (pend_d < BIG).any()
+            return jax.lax.psum(active.astype(jnp.int32), model_axis) > 0
+
+        if not overlap:
+            def hop(state):
+                beam_ids, beam_d, expanded, visited, _ = state
+                nodes, sel, expanded = jax.vmap(
+                    lambda bi, bd, ex: search_mod.pop_frontier(bi, bd, ex, e)
+                )(beam_ids, beam_d, expanded)
+                thr = beam_d[:, -1]
+                arr_ids, arr_d, visited = local_pass(nodes, sel, thr, visited)
+                beam_ids, beam_d, expanded = jax.vmap(search_mod.merge_beam)(
+                    beam_ids, beam_d, expanded, arr_ids, arr_d)
+                return (beam_ids, beam_d, expanded, visited,
+                        go_flag(beam_d, expanded))
+
+            state = (beam_ids, beam_d, expanded, visited,
+                     go_flag(beam_d, expanded))
+            state = jax.lax.while_loop(lambda s: s[-1], hop, state)
+            beam_ids, beam_d = state[0], state[1]
+        else:
+            def hop(state):
+                beam_ids, beam_d, expanded, visited, p_ids, p_d, _ = state
+                # pop + broadcast from the *stale* beam (last hop's arrivals
+                # are still pending) — the collective below is independent of
+                # this hop's merge, so the two overlap
+                nodes, sel, expanded = jax.vmap(
+                    lambda bi, bd, ex: search_mod.pop_frontier(bi, bd, ex, e)
+                )(beam_ids, beam_d, expanded)
+                thr = beam_d[:, -1]                      # stale threshold
+                # merge hop t-1's arrivals while hop t's collective flies;
+                # the top-k merge is the arrival re-filter — lanes the stale
+                # threshold over-admitted fall out here
+                beam_ids, beam_d, expanded = jax.vmap(search_mod.merge_beam)(
+                    beam_ids, beam_d, expanded, p_ids, p_d)
+                p_ids, p_d, visited = local_pass(nodes, sel, thr, visited)
+                return (beam_ids, beam_d, expanded, visited, p_ids, p_d,
+                        go_flag(beam_d, expanded, p_d))
+
+            pend_ids = jnp.full((q_own, c * r), -1, jnp.int32)
+            pend_d = jnp.full((q_own, c * r), BIG)
+            state = (beam_ids, beam_d, expanded, visited, pend_ids, pend_d,
+                     go_flag(beam_d, expanded))
+            state = jax.lax.while_loop(lambda s: s[-1], hop, state)
+            beam_ids, beam_d = state[0], state[1]
+
+        if has_tomb:
+            # scoring already drops dead candidates before the beam; only the
+            # seeded entry can be a dead beam resident (it must stay
+            # navigable) — push it out with one top_k, like exclude_dead
+            my_dead = jax.lax.dynamic_slice_in_dim(entry_dead, j * q_own,
+                                                   q_own, 0)
+            dead = ((beam_ids == my_ent[:, None]) & my_dead[:, None]
+                    & (beam_ids >= 0))
+            neg_d, order = jax.lax.top_k(-jnp.where(dead, BIG, beam_d), cfg.ef)
+            beam_ids = jnp.take_along_axis(beam_ids, order, axis=1)
+            beam_ids = jnp.where(jnp.take_along_axis(dead, order, axis=1),
+                                 -1, beam_ids)
+            beam_d = -neg_d
+        return beam_ids[:, : cfg.k], beam_d[:, : cfg.k]
 
     dp = data_axes if len(data_axes) > 1 else data_axes[0]
-    mapped = compat.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(model_axis, None, None), P(model_axis, None),
-                  P(model_axis, None, None), P(dp, None), P(dp)),
-        out_specs=(P(dp, None), P(dp, None)),
-        check_vma=False,
-    )
+    out_p = P((*data_axes, model_axis), None)
+    in_specs = [P(model_axis, None, None), P(model_axis, None),
+                P(model_axis, None, None)]
+    in_specs.append(P(model_axis, None) if has_tomb else P())
+    in_specs += [P(dp, None), P(dp)]
+    if not has_tomb:
+        # keep the block signature uniform; None threads through shard_map
+        # as a static empty pytree
+        wrapped = body
+        body_in = lambda v, i, p, q, en: wrapped(v, i, p, None, q, en)
+        mapped = compat.shard_map(
+            body_in, mesh=mesh,
+            in_specs=tuple(in_specs[:3] + in_specs[4:]),
+            out_specs=(out_p, out_p), check_vma=False)
+    else:
+        mapped = compat.shard_map(
+            body, mesh=mesh, in_specs=tuple(in_specs),
+            out_specs=(out_p, out_p), check_vma=False)
 
     jitted = jax.jit(mapped)
+    q_mult = d_total * c
+
+    def _args(db: ShardedDB):
+        base = (db.vectors, db.local_ids, db.part_adj)
+        if has_tomb:
+            if db.tombstone is None:
+                raise ValueError("searcher built with tombstone=True needs a "
+                                 "ShardedDB carrying per-shard tombstone words")
+            return base + (db.tombstone,)
+        return base
 
     def search(db: ShardedDB, queries, entries):
-        return jitted(db.vectors, db.local_ids, db.part_adj, queries, entries)
+        queries = jnp.asarray(queries)
+        entries = jnp.asarray(entries)
+        q0 = queries.shape[0]
+        pad = (-q0) % q_mult
+        if pad:
+            queries = jnp.concatenate(
+                [queries, jnp.broadcast_to(queries[:1], (pad, queries.shape[1]))])
+            entries = jnp.concatenate(
+                [entries, jnp.broadcast_to(entries[:1], (pad,))])
+        ids, dists = jitted(*_args(db), queries, entries)
+        return (ids[:q0], dists[:q0]) if pad else (ids, dists)
 
-    search.lower = lambda db, queries, entries: jitted.lower(
-        db.vectors, db.local_ids, db.part_adj, queries, entries)
+    def _lower(db: ShardedDB, queries, entries):
+        q0 = queries.shape[0]
+        pad = (-q0) % q_mult
+        if pad:
+            queries = jax.ShapeDtypeStruct((q0 + pad, queries.shape[1]),
+                                           queries.dtype)
+            entries = jax.ShapeDtypeStruct((q0 + pad,), entries.dtype)
+        return jitted.lower(*_args(db), queries, entries)
+
+    search.lower = _lower
     return search

@@ -118,10 +118,18 @@ def local_searcher(index, params: SearchParams, *, fee=None):
 
 def sharded_searcher(index, params: SearchParams, *, mesh=None,
                      n_shards: int | None = None, owner_policy: str = "shuffle",
-                     seed: int = 0, n_bits_log2: int = 23, fee=None):
-    """DaM shard_map retrieval (paper Fig. 12): vectors row-sharded over the
-    ``model`` axis, neighbor lists pre-partitioned by owner, queries over
-    ``data``.  With ``mesh=None`` a (1, n_devices) mesh is created."""
+                     seed: int = 0, n_bits_log2: int = 23, fee=None,
+                     owner=None, overlap: bool = False):
+    """Query-owner-sharded DaM retrieval (paper Fig. 12): vectors row-sharded
+    over the ``model`` axis, neighbor lists pre-partitioned by owner, queries
+    over ``data`` with each query's beam resident on exactly one model shard.
+    With ``mesh=None`` a (1, n_devices) mesh is created.
+
+    ``owner`` overrides the row->shard map (a streaming index passes its
+    stable capacity-wide map so appends never reshuffle resident rows);
+    ``overlap=True`` selects the double-buffered stale-threshold pipeline.
+    The returned ``run`` exposes the per-hop collective payload model as
+    ``run.payload`` (see ``distributed.retrieval.collective_payload``)."""
     import jax
     import jax.numpy as jnp
 
@@ -144,19 +152,25 @@ def sharded_searcher(index, params: SearchParams, *, mesh=None,
         n_shards = mesh.shape[model_axis]
 
     vectors = _base_vectors(index, params)
-    owner = gmod.map_owners(index.n, n_shards, owner_policy, seed=seed)
+    if owner is None:
+        owner = gmod.map_owners(index.n, n_shards, owner_policy, seed=seed)
     dam = gmod.build_dam(index.graph.base_adjacency, owner, n_shards)
     cfg = params.to_config(index.metric, index.seg)
+    tomb = index.tombstone
     with compat.set_mesh(mesh):
         searcher = rt.make_sharded_searcher(mesh, cfg, index.n,
                                             fee=_fee(index, params, fee),
                                             n_bits_log2=n_bits_log2,
                                             dfloat_cfg=_dfloat_cfg(index, params),
-                                            tombstone=index.tombstone)
+                                            tombstone=tomb is not None,
+                                            overlap=overlap)
         sh = rt.db_shardings(mesh)
-        sdb = rt.build_sharded_db(vectors, dam)
+        sdb = rt.build_sharded_db(vectors, dam, tombstone=tomb)
+        fields = ("vectors", "local_ids", "part_adj")
+        if tomb is not None:
+            fields += ("tombstone",)
         sdb = rt.ShardedDB(*(jax.device_put(getattr(sdb, f), getattr(sh, f))
-                             for f in ("vectors", "local_ids", "part_adj")))
+                             for f in fields))
     rows = _descent_rows(index, params)
 
     def run(queries) -> SearchResult:
@@ -167,6 +181,8 @@ def sharded_searcher(index, params: SearchParams, *, mesh=None,
         return SearchResult(ids=np.asarray(ids), dists=np.asarray(dists),
                             generation=index.generation)
 
+    run.payload = rt.collective_payload(cfg, max(p.shape[1] for p in dam.part_adj),
+                                        n_shards)
     return run
 
 

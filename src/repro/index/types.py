@@ -71,6 +71,10 @@ class SearchParams:
     storage: str = "f32"       # score dense f32 rows | the packed bitstream
                                # ("packed" decodes Dfloat words in-kernel;
                                #  ids are bit-identical to f32-over-db_q)
+    compact: float = 0.5       # frontier compaction keep fraction; 1.0 is
+                               # lossless (required for local/sharded bit
+                               # parity), 0.5 halves merge width at recall
+                               # parity
 
     def __post_init__(self):
         if self.storage == "packed" and not self.use_dfloat:
@@ -81,7 +85,7 @@ class SearchParams:
         return SearchConfig(ef=self.ef, k=self.k, metric=metric, seg=seg,
                             max_hops=self.max_hops, use_fee=self.use_fee,
                             expand=self.expand, fee_backend=self.fee_backend,
-                            storage=self.storage)
+                            storage=self.storage, compact=self.compact)
 
 
 @dataclasses.dataclass

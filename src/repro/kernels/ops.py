@@ -95,6 +95,44 @@ def fee_distance_packed(q, xp, threshold, alpha, beta, margin, *,
     return _fold_lane_mask(out, lane_mask)
 
 
+def fee_distance_stale(q, x, exit_threshold, admit_threshold, alpha, beta,
+                       margin, *, seg: int, metric: str = "l2",
+                       backend: str = "auto", tile_c: int = 128,
+                       lane_mask=None, dfloat_cfg: dfl.DfloatConfig | None = None):
+    """Threshold-carrying FEE variant for the sharded / double-buffered hop.
+
+    The VPE streams and early-exits against ``exit_threshold`` — in the
+    overlap pipeline that is the *previous* hop's beam bound, which is always
+    >= the current one, so exiting against it can only admit extra lanes,
+    never drop one the synchronous hop would keep (the exit test
+    ``est >= threshold`` is monotone in the threshold).  ``admit_threshold``
+    is then applied to the surviving lanes' full distances: a lane with
+    ``dist >= admit_threshold`` cannot displace anything in a full beam whose
+    worst entry is ``admit_threshold`` (and an underfull beam carries
+    ``admit_threshold == BIG``, which drops nothing), so filtering it here —
+    before the shard-local top-k and the cross-shard collective — is exact
+    while keeping dead weight out of the reduced payload.
+
+    Returns ``(dist, admit, segs_used)``: ``admit`` is True for lanes that
+    survived both thresholds (note the *positive* polarity, vs. the
+    ``rejected`` flag of :func:`fee_distance`).  With ``dfloat_cfg`` the
+    candidates ``x`` are packed uint32 rows scored via
+    :func:`fee_distance_packed`.
+    """
+    import jax.numpy as jnp
+
+    if dfloat_cfg is None:
+        dist, rejected, segs_used = fee_distance(
+            q, x, exit_threshold, alpha, beta, margin, seg=seg, metric=metric,
+            backend=backend, tile_c=tile_c, lane_mask=lane_mask)
+    else:
+        dist, rejected, segs_used = fee_distance_packed(
+            q, x, exit_threshold, alpha, beta, margin, dfloat_cfg=dfloat_cfg,
+            seg=seg, metric=metric, backend=backend, tile_c=tile_c,
+            lane_mask=lane_mask)
+    return dist, ~rejected & (dist < admit_threshold), segs_used
+
+
 def dfloat_unpack_rows(packed, cfg: dfl.DfloatConfig, *,
                        backend: str = "auto", tile_c: int = 128):
     """Traceable packed-row decode: (C, W) uint32 -> (C, D) f32, bit-exact.

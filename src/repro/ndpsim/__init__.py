@@ -2,5 +2,5 @@
 from repro.ndpsim.cache import SetAssocCache  # noqa: F401
 from repro.ndpsim.engine import (  # noqa: F401
     SimFlags, SimResult, WriteStats, account_writes, compressed_list_bytes,
-    simulate_ndp, simulate_platform)
+    simulate_ndp, simulate_platform, tree_merge_bytes)
 from repro.ndpsim import timing  # noqa: F401

@@ -62,6 +62,10 @@ class SimFlags:
     # codes (what closes Fig. 20's list-traffic gap vs dense 4B ids);
     # "dense" = plain 4B ids (the pre-compression accounting, kept for A/B)
     list_compression: str = "varint"
+    # per-link lane budget of the hierarchical partial-result merge: each
+    # sender truncates to its top-``merge_width`` candidates before shipping
+    # (the per-channel top-r reduce of the sharded searcher; 8B = id + dist)
+    merge_width: int = 64
 
 
 @dataclasses.dataclass
@@ -80,6 +84,13 @@ class SimResult:
     dram_bytes_per_query: float
     energy_uj_per_query: float
     writes: "WriteStats | None" = None  # mutation write traffic (streaming)
+    # inter-channel partial-result traffic under the two merge topologies:
+    # flat = every channel ships all accepted candidates to the host merger;
+    # tree = log2(C) pairwise partial merges, each link truncated to
+    # ``SimFlags.merge_width`` lanes, root -> host (the sharded searcher's
+    # reduce-before-collective, Cosmos-style).  Bytes per query.
+    merge_flat_bytes_per_query: float = 0.0
+    merge_tree_bytes_per_query: float = 0.0
 
     def breakdown(self):
         tot = self.t_neighbor_us + self.t_distance_us + self.t_partial_us
@@ -131,6 +142,34 @@ def compressed_list_bytes(adj: np.ndarray) -> np.ndarray:
     rows, cols = np.nonzero(adj >= 0)
     return _delta_coded_bytes(rows, adj[rows, cols].astype(np.int64),
                               adj.shape[0])
+
+
+def tree_merge_bytes(counts, width: int, lane_bytes: int = 8) -> float:
+    """Inter-channel bytes of one hop's hierarchical partial-result merge.
+
+    ``counts[c]`` is channel ``c``'s accepted-candidate count this hop.  The
+    channels pair-merge in log2(C) levels: at each level the odd partner
+    ships its top-``width`` lanes (truncation is exact for any final top-k
+    <= width — a lane outside a sender's local top-``width`` cannot be in
+    the merged top-``width``), the receiver keeps the top-``width`` of the
+    union, and the root finally ships its merged result to the host.  The
+    flat counterpart ships ``lane_bytes * sum(counts)`` straight to the
+    host; the tree trades relay hops for per-link truncation, which wins
+    whenever per-channel accepts exceed ``width`` and bounds every link —
+    host ingress included — at ``width`` lanes.
+    """
+    counts = [int(c) for c in counts]
+    total = 0
+    while len(counts) > 1:
+        if len(counts) % 2:
+            counts.append(0)
+        nxt = []
+        for a, b in zip(counts[::2], counts[1::2]):
+            ship = min(b, width)
+            total += lane_bytes * ship
+            nxt.append(min(a + ship, width))
+        counts = nxt
+    return float(total + lane_bytes * min(counts[0], width))
 
 
 def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
@@ -209,6 +248,7 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
     tot_time_ns = 0.0
     t_nb = t_dist = t_part = 0.0
     dram_bytes = 0.0
+    merge_flat_bytes = merge_tree_bytes = 0.0
     energy_pj = 0.0
     pf_attempts = np.zeros(hmax)
     pf_hits = np.zeros(hmax)
@@ -237,6 +277,7 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
 
             for i in act:
                 q = batch[i]
+                acc_ch = np.zeros(n_sub, np.int64)   # this hop's accepts/chan
                 vs = [int(v) for v in node[q, h] if v >= 0]  # this hop's frontier
                 # ---- phase 1: neighbor-list retrieval --------------------
                 if flags.dam:
@@ -322,11 +363,16 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
                     if d < BIG / 2:
                         n_accept_total += 1
                         pools[i][int(owner[cid])][cid] = d
+                        acc_ch[int(owner[cid])] += 1
 
                 # expanded nodes leave every local pool
                 for v in vs:
                     for c in range(n_sub):
                         pools[i][c].pop(v, None)
+
+                # partial-result fabric traffic this hop, both topologies
+                merge_flat_bytes += 8.0 * acc_ch.sum()
+                merge_tree_bytes += tree_merge_bytes(acc_ch, flags.merge_width)
 
             # ---- phase 3: host merge + prefetch overlap ------------------
             merge_ns = hw.host_merge_base_ns + hw.host_merge_per_cand_ns * n_accept_total
@@ -375,6 +421,8 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
         idle_frac=float(idle_num / max(idle_den, 1e-9)),
         dram_bytes_per_query=dram_bytes / n_q,
         energy_uj_per_query=energy_pj * 1e-6 / n_q,
+        merge_flat_bytes_per_query=merge_flat_bytes / n_q,
+        merge_tree_bytes_per_query=merge_tree_bytes / n_q,
     )
 
 

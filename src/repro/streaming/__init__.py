@@ -13,6 +13,12 @@
     serve one immutable generation race-free while writes land in the next,
   * a WAL-style delta log (``save_delta`` / ``replay``): format-v3 segments
     persisted via ``ft.checkpoint`` alongside the v2 base artifact.
+
+``ShardedMutableIndex`` serves a MutableIndex through the query-owner
+sharded backend: slot-stable row->shard ownership (appends route to the
+owning shard's capacity tail) and per-shard tombstone words folded into each
+shard's local FEE mask instead of a replicated global bitmap.
 """
 from repro.streaming.delta import read_segments  # noqa: F401
 from repro.streaming.mutable import MutableIndex, MutationStats  # noqa: F401
+from repro.streaming.sharded import ShardedMutableIndex  # noqa: F401

@@ -1,0 +1,159 @@
+"""Sharded streaming serving: a MutableIndex behind the query-owner backend.
+
+Couples ``repro.streaming.MutableIndex`` (stable-id capacity arrays,
+tombstone visibility, incremental graph repair) with the owner-sharded
+``sharded`` backend so churn serving keeps the paper's DaM layout:
+
+  * row->shard ownership is assigned **per capacity slot at slot-creation
+    time** and never changes: base rows by the usual shuffle policy, every
+    reserved/grown tail slot to the least-loaded shard at the moment the
+    slot comes into existence.  Appends simply land in the capacity tail and
+    *inherit* the slot's owner — so an append is routed to (exactly) the
+    owning shard's tail, resident rows never migrate between shards across
+    generations, and each shard's local slot of a row is stable under churn
+    (``core.graph.build_dam`` orders a shard's slots by global id, and fresh
+    ids are always the largest);
+  * visibility changes are per-shard-local: a delete (or an append flipping
+    its slot alive) dirties exactly one 32-bit word of the owning shard's
+    local tombstone bitmap — ``touched_words`` returns that (shard, word)
+    set, and the serving program folds the per-shard words into the local
+    FEE lane mask (``distributed.retrieval.build_sharded_db``), so no shard
+    ever holds, or receives updates for, another shard's dead bits.  The
+    old design replicated the full O(capacity/32) bitmap on every shard and
+    re-broadcast all of it each generation.
+
+Searchers are cached per (generation, params, overlap): serving a frozen
+generation repeatedly reuses one compiled program; any mutation bumps the
+generation and lazily rebuilds on the next search.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import graph as gmod
+from repro.index import Index, SearchParams
+from repro.index.types import SearchResult
+from repro.streaming.mutable import MutableIndex
+
+
+class ShardedMutableIndex:
+    """A :class:`MutableIndex` served through the owner-sharded backend.
+
+    Mutation methods (``append`` / ``delete`` / ``repair`` / WAL) delegate to
+    the wrapped index; ``searcher``/``search`` build the sharded program over
+    the current frozen snapshot with this object's stable owner map.
+    """
+
+    def __init__(self, base: Index | MutableIndex, n_shards: int, *,
+                 owner_policy: str = "shuffle", seed: int = 0, **mutable_kw):
+        self.mutable = (base if isinstance(base, MutableIndex)
+                        else MutableIndex(base, **mutable_kw))
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = n_shards
+        self._policy, self._seed = owner_policy, seed
+        # base rows by policy; the pre-reserved tail is assigned immediately
+        # (slots exist the moment capacity does) via least-loaded
+        self._owner = np.full(self.mutable.capacity, -1, np.int32)
+        n0 = self.mutable.n
+        self._owner[:n0] = gmod.map_owners(n0, n_shards, owner_policy,
+                                           seed=seed)
+        self._assign_tail(n0)
+        self._cache: tuple | None = None   # (generation, key) -> run
+
+    # -- ownership -----------------------------------------------------------
+    def _assign_tail(self, start: int):
+        """Owner for every slot in [start, capacity): round-robin starting
+        from the least-loaded shard (ties by shard id) — deterministic, and
+        consecutive appends spread across shards instead of clustering."""
+        cap = self.mutable.capacity
+        n_new = cap - start
+        if n_new <= 0:
+            return
+        load = np.bincount(self._owner[self._owner >= 0],
+                           minlength=self.n_shards).astype(np.int64)
+        order = np.lexsort((np.arange(self.n_shards), load))
+        assign = order[np.arange(n_new) % self.n_shards]
+        self._owner = np.concatenate(
+            [self._owner[:start], assign.astype(np.int32)])
+
+    def _sync_owner(self):
+        if self._owner.shape[0] < self.mutable.capacity:
+            self._assign_tail(self._owner.shape[0])
+
+    def owner_of(self, ids) -> np.ndarray:
+        """Owning shard of each (allocated or reserved) slot id."""
+        self._sync_owner()
+        return self._owner[np.asarray(ids)]
+
+    def shard_load(self) -> np.ndarray:
+        """Alive rows per shard (the balance appends route against)."""
+        self._sync_owner()
+        alive = self.mutable.alive_ids()
+        return np.bincount(self._owner[alive], minlength=self.n_shards)
+
+    def touched_words(self, ids) -> dict[int, np.ndarray]:
+        """(owner shard -> local tombstone word indices) a visibility flip of
+        ``ids`` dirties — the per-generation delta a serving shard consumes.
+        Each id maps to exactly one word of exactly one shard."""
+        self._sync_owner()
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        own = self._owner[ids]
+        out = {}
+        for c in range(self.n_shards):
+            mine = ids[own == c]
+            if len(mine):
+                # local slot = rank of the id among the shard's slot ids
+                # (build_dam orders a shard's slots by global id)
+                shard_ids = np.nonzero(self._owner == c)[0]
+                slots = np.searchsorted(shard_ids, mine)
+                out[c] = np.unique(slots >> 5)
+        return out
+
+    # -- delegated mutation (any of these bumps the generation) --------------
+    def append(self, vectors) -> np.ndarray:
+        ids = self.mutable.append(vectors)
+        self._sync_owner()
+        return ids
+
+    def delete(self, ids) -> int:
+        return self.mutable.delete(ids)
+
+    def repair(self) -> int:
+        return self.mutable.repair()
+
+    def freeze(self) -> Index:
+        return self.mutable.freeze()
+
+    @property
+    def generation(self) -> int:
+        return self.mutable.generation
+
+    @property
+    def stats(self):
+        return self.mutable.stats
+
+    # -- serving -------------------------------------------------------------
+    def searcher(self, params: SearchParams | None = None, *, mesh=None,
+                 overlap: bool = False, **opts):
+        """Owner-sharded ``run(queries) -> SearchResult`` over the current
+        generation's snapshot (cached until the next mutation)."""
+        from repro.index import backends
+
+        params = params or SearchParams()
+        snap = self.freeze()                 # drains repairs, caches per gen
+        self._sync_owner()
+        key = (snap.generation, params, overlap)
+        if mesh is None and self._cache is not None and self._cache[0] == key:
+            return self._cache[1]
+        run = backends.sharded_searcher(
+            snap, params, mesh=mesh,
+            n_shards=None if mesh is not None else self.n_shards,
+            owner=self._owner[: snap.n], overlap=overlap, **opts)
+        if mesh is None:
+            self._cache = (key, run)
+        return run
+
+    def search(self, queries, params: SearchParams | None = None,
+               **kw) -> SearchResult:
+        return self.searcher(params, **kw)(queries)
