@@ -31,6 +31,10 @@ packed-native scoring (the CI smoke matrix runs once per storage mode).
 ``mutation`` row: a 10%-append + 10%-delete churn through
 ``repro.streaming.MutableIndex`` reporting append throughput, repair cost,
 post-churn QPS vs. the frozen pre-churn index, and NDP write-burst totals.
+A ``serving`` row (``BENCH_SERVE=0`` to skip) drives the same operating
+point through ``repro.serve`` under Poisson load with live churn: latency
+tail p50/p99/p999, goodput within SLO, degraded fraction, cold-start-to-
+first-response, and the donated-prefix hot-swap byte accounting.
 """
 from __future__ import annotations
 
@@ -291,6 +295,60 @@ def _mutation_row(idx, db, params: SearchParams, q, frozen_qps: float) -> dict:
     )
 
 
+def _serving_row(idx, db, params: SearchParams, storage: str) -> dict:
+    """Online-serving smoke: Poisson load with mid-run churn -> hot swaps.
+
+    Runs the multi-expansion operating point through ``repro.serve`` — queue,
+    dynamic batcher, SLO admission — over a live ``MutableIndex`` so every
+    run exercises at least one zero-downtime generation swap; reports the
+    latency tail (p50/p99/p999), goodput, degraded fraction, cold-start-to-
+    first-response, and the donated-prefix swap byte accounting.
+    """
+    from repro.serve import ServeConfig, Server, run_load
+    from repro.streaming import MutableIndex
+
+    rps, duration_s, slo_ms = 40.0, (4.0 if FAST else 8.0), 200.0
+    cfg = ServeConfig(ef_buckets=(params.ef,), batch_buckets=(1, 4, 16),
+                      k_max=10, expand=params.expand, storages=(storage,),
+                      use_dfloat=params.use_dfloat, use_fee=params.use_fee,
+                      slo_ms=slo_ms)
+    mi = MutableIndex(idx, ef_build=max(48, params.ef))
+    rng = np.random.default_rng(0)
+    noise = 0.05 * float(db.vectors.std())
+
+    def churn():
+        src = db.vectors[rng.integers(0, db.n, 16)]
+        mi.append(src + noise * rng.standard_normal(src.shape)
+                  .astype(np.float32))
+        mi.delete(rng.integers(0, db.n, 4))
+
+    with Server(mi, cfg) as srv:
+        run_load(srv, db.queries, rps=rps, duration_s=duration_s,
+                 ef=params.ef, k=10, deadline_ms=slo_ms, seed=0,
+                 mutate_fn=churn, mutate_every_s=1.0)
+        s = srv.metrics.summary()
+
+    row = dict(rps=rps, duration_s=duration_s, pattern="poisson",
+               ef=params.ef, expand=params.expand, storage=storage,
+               slo_ms=slo_ms)
+    for key in ("requests", "ok", "shed", "timeout", "degraded_fraction",
+                "goodput_qps", "cold_start_ms", "p50_ms", "p99_ms",
+                "p999_ms", "mean_ms"):
+        if key in s:
+            row[key] = round(s[key], 3) if isinstance(s[key], float) else s[key]
+    if "p999_ms" in s:
+        row["p999_over_p50"] = round(s["p999_ms"] / max(s["p50_ms"], 1e-9), 2)
+    if "swaps" in s:
+        sw = s["swaps"]
+        row["swaps"] = dict(
+            installs=sw["installs"], delta_installs=sw["delta_installs"],
+            h2d_bytes=sw["h2d_bytes"],
+            max_delta_reupload_fraction=round(
+                sw["max_delta_reupload_fraction"], 5),
+            full_bytes=sw["last"]["full_bytes"])
+    return row
+
+
 def _memory_row(idx) -> dict:
     f32 = 4 * idx.dim
     packed = 4 * idx.db_packed.shape[1]
@@ -369,6 +427,8 @@ def run_json(out_path: str | Path = "BENCH_search.json",
         ndpsim=_ndpsim_row(idx, db, p_multi, q),
         memory=_memory_row(idx),
     )
+    if os.environ.get("BENCH_SERVE", "1") not in ("", "0"):
+        result["serving"] = _serving_row(idx, db, p_multi, storage)
     if churn:
         result["mutation"] = _mutation_row(idx, db, p_multi, q, multi["qps"])
     Path(out_path).write_text(json.dumps(result, indent=1) + "\n")
@@ -390,6 +450,17 @@ def run_json(out_path: str | Path = "BENCH_search.json",
             f"flat={r['flat_fabric_bytes_per_query']}B" for r in sc["rows"])
             + f"  scaling_x={sc['scaling_x']} "
             f"overhead@1={sc['overhead_vs_local_1shard']}x")
+    if "serving" in result:
+        sv = result["serving"]
+        print(f"[bench_search] serving: {sv.get('requests', 0)} reqs @ "
+              f"{sv['rps']} rps, p50/p99/p999 {sv.get('p50_ms', '?')}/"
+              f"{sv.get('p99_ms', '?')}/{sv.get('p999_ms', '?')} ms "
+              f"(p999/p50 {sv.get('p999_over_p50', '?')}x), goodput "
+              f"{sv.get('goodput_qps', 0)} qps, cold start "
+              f"{sv.get('cold_start_ms', 0):.0f} ms, "
+              f"{sv.get('swaps', {}).get('delta_installs', 0)} delta swaps "
+              f"(worst re-upload "
+              f"{sv.get('swaps', {}).get('max_delta_reupload_fraction', 0):.3%})")
     if churn:
         m = result["mutation"]
         print(f"[bench_search] mutation: {m['append_rows_per_s']} appends/s, "

@@ -11,6 +11,7 @@ execution backends.
 """
 from repro.core.fee import FeeParams  # noqa: F401  (re-export: typed pytree)
 from repro.index.backends import BACKENDS  # noqa: F401
+from repro.index.device import DeviceCache, UploadStats  # noqa: F401
 from repro.index.index import Index  # noqa: F401
 from repro.index.types import (  # noqa: F401
     FeeFit, IndexSpec, SearchParams, SearchResult)

@@ -1,0 +1,283 @@
+"""Generation-aware device residency: donated prefix uploads for hot-swap.
+
+A streaming :class:`repro.streaming.MutableIndex` never rewrites a payload row
+once it is written: appends land at the capacity tail, deletes flip tombstone
+bits, and only adjacency rows are patched in place (copy-on-write while a
+snapshot is outstanding).  So when a serving tier swaps generation ``g`` for
+``g+1`` over the *same* capacity arrays, almost all device-resident bytes are
+already correct — re-uploading the full payload per swap would ship megabytes
+to move kilobytes.
+
+:class:`DeviceCache` exploits that invariant.  It keeps the device arrays of
+the last installed snapshot and, on the next install, ships only
+
+  * the appended payload tail (rows ``[prev_n, new_n)`` of the DB array),
+  * the adjacency rows whose contents actually changed (host diff against the
+    previous snapshot's copy-on-write adjacency — covers new tail rows,
+    reverse-edge patches and delete repair alike), and
+  * the dirtied 32-bit tombstone words,
+
+splicing them into the resident buffers with scatter updates.  With
+``donate=True`` the old buffer is *donated* to the splice (``jax.jit``
+``donate_argnums``), so the update happens in place and peak device memory
+stays at one copy — the caller must guarantee the previous generation has no
+in-flight consumers (the serve batcher swaps between batches, which does).
+With ``donate=False`` the splice allocates a fresh buffer and copies the
+prefix device-side: the old generation stays live, and the host->device
+traffic is still only the delta.
+
+Every install returns an :class:`UploadStats` with byte-exact accounting of
+what was shipped vs. what a cold upload would have shipped — the serve bench
+and tests assert the "no full-payload re-upload" guarantee mechanically.
+
+The resulting arrays are seeded into the snapshot's own device cache
+(:meth:`Index.seed_device`), so ``Index.searcher(...)`` picks them up
+transparently; searcher functions themselves are cached per generation (each
+frozen snapshot is its own ``Index`` with its own searcher cache, and the
+underlying jitted program is keyed by array *shapes*, so a same-capacity swap
+never re-traces).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+
+
+def _pow2_pad(n: int) -> int:
+    """Next power of two >= n (bounds the number of scatter-program shapes)."""
+    return 1 << max(0, n - 1).bit_length()
+
+
+@dataclasses.dataclass
+class UploadStats:
+    """Byte accounting of one generation install (what actually shipped)."""
+
+    generation: int | None
+    mode: str                     # "full" | "delta"
+    h2d_bytes: int                # host->device bytes shipped by this install
+    full_bytes: int               # what a cold upload of the same gen ships
+    tail_rows: int = 0            # appended payload rows shipped
+    dirty_adj_rows: int = 0       # adjacency rows that changed content
+    dirty_tombstone_words: int = 0
+    reused_rows: int = 0          # payload rows NOT re-shipped (the prefix)
+    donated: bool = False         # prefix spliced in place (buffer donation)
+    per_array: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def reupload_fraction(self) -> float:
+        return self.h2d_bytes / max(self.full_bytes, 1)
+
+
+class DeviceCache:
+    """Keeps one serving snapshot's arrays device-resident across swaps.
+
+    One cache serves one (storage, use_dfloat) representation of one logical
+    index lineage (a ``MutableIndex`` and its ``freeze()`` snapshots).  Call
+    :meth:`install` with each new snapshot; the returned stats report how many
+    bytes the swap actually moved.
+    """
+
+    def __init__(self, storage: str = "f32", use_dfloat: bool = True,
+                 donate: bool = True):
+        self.storage = storage
+        self.use_dfloat = use_dfloat
+        self.donate = donate
+        self._prev = None          # last installed snapshot (host refs)
+        self._prev_n = 0           # its allocated row count
+        self._db = self._adj = self._tomb = None   # device arrays
+
+    # -- host-side views ----------------------------------------------------
+    def _host_db_full(self, idx) -> np.ndarray:
+        if self.storage == "packed":
+            return idx.db_packed
+        return idx.db_q if self.use_dfloat else idx.db_rot
+
+    def _host_db_tail(self, idx, lo: int, hi: int) -> np.ndarray:
+        """Appended payload rows without materializing a full ``db_q``."""
+        if self.storage == "packed":
+            return idx.db_packed[lo:hi]
+        if self.use_dfloat:
+            return idx.emulated_rows(np.arange(lo, hi))
+        return idx.db_rot[lo:hi]
+
+    @staticmethod
+    def _n_rows(idx) -> int:
+        """Allocated prefix length (== capacity for non-snapshot indices)."""
+        return idx.n if idx.n_rows is None else idx.n_rows
+
+    # -- install ------------------------------------------------------------
+    def install(self, idx) -> UploadStats:
+        """Make ``idx`` the device-resident generation; seed its device cache.
+
+        A first install (or a capacity/representation change) uploads the full
+        payload; any later same-capacity install ships only the delta.
+        """
+        new_n = self._n_rows(idx)
+        full_bytes = (self._host_full_nbytes(idx)
+                      + idx.graph.base_adjacency.nbytes
+                      + (idx.tombstone.nbytes if idx.tombstone is not None
+                         else 0))
+        compatible = (
+            self._prev is not None
+            and self._db is not None
+            and self._db.shape[0] == idx.n
+            and self._prev.graph.base_adjacency.shape
+                == idx.graph.base_adjacency.shape
+            and (idx.tombstone is None) == (self._tomb is None)
+        )
+        if not compatible:
+            stats = self._install_full(idx, full_bytes)
+        else:
+            stats = self._install_delta(idx, new_n, full_bytes)
+        self._prev, self._prev_n = idx, new_n
+        self._seed(idx)
+        return stats
+
+    def _seed(self, idx) -> None:
+        idx.seed_device(("db", self.storage, self.use_dfloat), self._db)
+        idx.seed_device("adj", self._adj)
+        if self._tomb is not None:
+            idx.seed_device("tombstone", self._tomb)
+
+    def prewarm(self, max_updates: int | None = None) -> int:
+        """Compile the pow2 scatter-splice lattice before live traffic.
+
+        Each delta install pads its update count to a power of two; the first
+        occurrence of each (array, count) shape compiles a scatter program,
+        and on the serving path that compile is a latency spike for whatever
+        batches queue behind the install.  This runs every size once with a
+        no-op write (row 0 set to its own value), off the hot path.  Must be
+        called after :meth:`install`; re-seeds the installed snapshot since
+        donated buffers are consumed by the warmup splices.
+        """
+        compiled = 0
+        for name in ("_db", "_adj", "_tomb"):
+            arr = getattr(self, name)
+            if arr is None:
+                continue
+            cap = arr.shape[0]
+            limit = _pow2_pad(min(max_updates or cap, cap))
+            row = np.asarray(arr[:1])
+            size = 1
+            while size <= limit:
+                idx_ = np.zeros(size, np.int32)
+                rows = np.repeat(row, size, axis=0)
+                arr, _ = self._splice(arr, idx_, rows)
+                setattr(self, name, arr)
+                compiled += 1
+                size *= 2
+        if self._prev is not None:
+            self._seed(self._prev)
+        return compiled
+
+    def _host_full_nbytes(self, idx) -> int:
+        # itemsize is 4 for every representation (f32 or uint32 words)
+        if self.storage == "packed":
+            return idx.db_packed.nbytes
+        return idx.db_rot.nbytes   # db_q has db_rot's shape/dtype
+
+    def _install_full(self, idx, full_bytes: int) -> UploadStats:
+        import jax.numpy as jnp
+
+        db = self._host_db_full(idx)
+        self._db = jnp.asarray(db)
+        self._adj = jnp.asarray(idx.graph.base_adjacency, jnp.int32)
+        self._tomb = (None if idx.tombstone is None
+                      else jnp.asarray(idx.tombstone, jnp.uint32))
+        per = dict(db=int(db.nbytes), adj=int(idx.graph.base_adjacency.nbytes),
+                   tombstone=int(idx.tombstone.nbytes
+                                 if idx.tombstone is not None else 0))
+        return UploadStats(generation=idx.generation, mode="full",
+                           h2d_bytes=sum(per.values()), full_bytes=full_bytes,
+                           reused_rows=0, per_array=per)
+
+    def _install_delta(self, idx, new_n: int, full_bytes: int) -> UploadStats:
+        prev_n = self._prev_n
+        per = {}
+
+        # appended payload tail: rows [prev_n, new_n) — the *only* payload
+        # rows whose bytes can differ (MutableIndex never rewrites a row)
+        tail_ids = np.arange(prev_n, new_n, dtype=np.int32)
+        tail_rows = self._host_db_tail(idx, prev_n, new_n)
+        self._db, b = self._splice(self._db, tail_ids, tail_rows)
+        per["db"] = b
+
+        # adjacency: exact host diff vs the previous snapshot's (COW) copy —
+        # catches tail rows, reverse-edge patches and repair rewrites alike
+        old_adj, new_adj = self._prev.graph.base_adjacency, \
+            idx.graph.base_adjacency
+        if old_adj is new_adj:
+            dirty = np.empty(0, np.int32)
+        else:
+            dirty = np.nonzero((old_adj != new_adj).any(axis=1))[0] \
+                .astype(np.int32)
+        self._adj, b = self._splice(self._adj, dirty, new_adj[dirty])
+        per["adj"] = b
+
+        # tombstone: dirtied 32-bit words only
+        n_words = 0
+        if idx.tombstone is not None:
+            old_t = self._prev.tombstone
+            if old_t is None or old_t.shape != idx.tombstone.shape:
+                widx = np.arange(idx.tombstone.shape[0], dtype=np.int32)
+            else:
+                widx = np.nonzero(old_t != idx.tombstone)[0].astype(np.int32)
+            n_words = len(widx)
+            self._tomb, b = self._splice(self._tomb, widx,
+                                         idx.tombstone[widx])
+            per["tombstone"] = b
+
+        return UploadStats(
+            generation=idx.generation, mode="delta",
+            h2d_bytes=sum(per.values()), full_bytes=full_bytes,
+            tail_rows=new_n - prev_n, dirty_adj_rows=int(len(dirty)),
+            dirty_tombstone_words=n_words, reused_rows=prev_n,
+            donated=self.donate, per_array=per)
+
+    # -- scatter splice -----------------------------------------------------
+    def _splice(self, old, idx: np.ndarray, rows: np.ndarray):
+        """Write ``rows`` at ``idx`` of device array ``old``; returns the new
+        array plus the host->device bytes shipped.  Index counts are padded to
+        the next power of two (repeating the last update — same value, so the
+        duplicate scatter is a no-op) to bound the number of compiled scatter
+        shapes at log2(capacity)."""
+        import jax.numpy as jnp
+
+        if len(idx) == 0:
+            return old, 0
+        pad = _pow2_pad(len(idx))
+        if pad > len(idx):
+            idx = np.concatenate([idx, np.repeat(idx[-1:], pad - len(idx))])
+            rows = np.concatenate([rows,
+                                   np.repeat(rows[-1:], pad - len(rows),
+                                             axis=0)])
+        shipped = int(idx.nbytes + rows.nbytes)
+        fn = _scatter_set_donated if self.donate else _scatter_set
+        return fn(old, jnp.asarray(idx), jnp.asarray(rows)), shipped
+
+
+def _make_scatter(donate: bool):
+    import jax
+
+    def scatter(old, idx, rows):
+        return old.at[idx].set(rows)
+
+    return jax.jit(scatter, donate_argnums=(0,) if donate else ())
+
+
+# built lazily so importing this module doesn't pull in jax
+_scatter_cache: dict = {}
+
+
+def _scatter_set_donated(old, idx, rows):
+    if "donated" not in _scatter_cache:
+        _scatter_cache["donated"] = _make_scatter(True)
+    return _scatter_cache["donated"](old, idx, rows)
+
+
+def _scatter_set(old, idx, rows):
+    if "plain" not in _scatter_cache:
+        _scatter_cache["plain"] = _make_scatter(False)
+    return _scatter_cache["plain"](old, idx, rows)

@@ -66,6 +66,11 @@ class Index:
     tombstone: np.ndarray | None = None
     # snapshot generation of a streaming MutableIndex (None = not a snapshot)
     generation: int | None = None
+    # allocated prefix length of a capacity-array snapshot: rows >= n_rows are
+    # unwritten tail slots (always tombstoned).  None = every row is real.
+    # The serving tier's generation-aware device upload (index.device) uses it
+    # to ship only the appended tail on a snapshot hot-swap.
+    n_rows: int | None = None
     _db_q: np.ndarray | None = dataclasses.field(default=None, repr=False,
                                                  compare=False)
     _searchers: dict = dataclasses.field(default_factory=dict, repr=False,
@@ -157,6 +162,20 @@ class Index:
         if "tombstone" not in self._device:
             self._device["tombstone"] = jnp.asarray(self.tombstone, jnp.uint32)
         return self._device["tombstone"]
+
+    def seed_device(self, key, arr) -> None:
+        """Pre-populate the device-array cache (keys: ``("db", storage,
+        use_dfloat)``, ``"adj"``, ``"tombstone"``).  The serving tier's
+        :class:`repro.index.device.DeviceCache` seeds snapshots with
+        prefix-aliased uploads so a generation swap never re-ships the full
+        payload; ``searcher()`` picks the seeded arrays up transparently."""
+        self._device[key] = arr
+
+    def drop_device(self) -> None:
+        """Release this index's device arrays and compiled-searcher cache
+        (a retired serving generation whose buffers may have been donated)."""
+        self._device.clear()
+        self._searchers.clear()
 
     # -- build --------------------------------------------------------------
     @classmethod
@@ -252,6 +271,8 @@ class Index:
         )
         if self.generation is not None:
             meta["generation"] = self.generation
+        if self.n_rows is not None:
+            meta["n_rows"] = self.n_rows
         (path / "spec.json").write_text(json.dumps(meta, indent=1))
         arrays = dict(
             spca_mean=self.spca.mean, spca_components=self.spca.components,
@@ -320,6 +341,7 @@ class Index:
                    timings=meta.get("timings", {}),
                    tombstone=a.get("tombstone"),
                    generation=meta.get("generation"),
+                   n_rows=meta.get("n_rows"),
                    # v1 artifacts carried the derived copy; seed the cache
                    _db_q=a.get("db_q"))
 

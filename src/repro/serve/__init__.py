@@ -1,0 +1,24 @@
+"""repro.serve — online serving over the unified Index API.
+
+    from repro.serve import Server, ServeConfig, run_load
+
+    with Server(mutable_index, ServeConfig(slo_ms=50)) as srv:
+        fut = srv.submit(query, k=10, ef=64)
+        resp = fut.result()            # Response(ids, dists, generation, ...)
+        responses = run_load(srv, queries, rps=100, duration_s=10)
+
+Continuous dynamic batching over a fixed program lattice (no retraces under
+live traffic), SLO-aware admission with timeout / shed / ef degradation, and
+zero-downtime generation hot-swap with donated-prefix device uploads.
+"""
+from repro.serve.admission import (  # noqa: F401
+    AdmissionController, LatencyModel)
+from repro.serve.config import ServeConfig  # noqa: F401
+from repro.serve.loadgen import run_load  # noqa: F401
+from repro.serve.metrics import Metrics  # noqa: F401
+from repro.serve.queue import RequestQueue  # noqa: F401
+from repro.serve.request import Request, Response  # noqa: F401
+from repro.serve.server import Server  # noqa: F401
+from repro.serve.swap import GenerationInstaller, SnapshotWatcher  # noqa: F401
+from repro.serve.warmup import (  # noqa: F401
+    compile_programs, enable_compilation_cache)

@@ -1,0 +1,95 @@
+"""SLO-aware admission: latency prediction, timeout, and ef degradation.
+
+The controller keeps an EMA of observed service time per
+``(group, batch_bucket)`` cell — seeded by the warmup timings, refined by
+live traffic — and uses it at batch-formation time to decide, per batch:
+
+  1. requests whose deadline has *already* passed are failed fast with
+     ``status="timeout"`` (no device work wasted on a dead request);
+  2. if the predicted service time would blow the tightest remaining budget
+     in the batch, or the queue is deeper than ``degrade_depth``, the whole
+     batch is downgraded to a lower ef bucket (same program family, smaller
+     beam -> faster) and every response is stamped ``degraded=True``.
+
+Degrading the whole batch — not single requests — keeps the group key
+uniform so the batch still runs as one program.  ``k`` never degrades:
+``k_max <= min(ef_buckets)`` guarantees any bucket can serve any k.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+
+class LatencyModel:
+    """EMA of service seconds per (group, batch_bucket) program cell."""
+
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = alpha
+        self._ema: dict = {}
+        self._lock = threading.Lock()
+
+    def observe(self, group, bucket: int, seconds: float) -> None:
+        with self._lock:
+            key = (group, bucket)
+            prev = self._ema.get(key)
+            self._ema[key] = (seconds if prev is None
+                              else self.alpha * seconds
+                              + (1 - self.alpha) * prev)
+
+    def predict(self, group, bucket: int) -> float | None:
+        with self._lock:
+            est = self._ema.get((group, bucket))
+            if est is not None:
+                return est
+            # unseen cell: fall back to the worst same-group estimate
+            same = [v for (g, _), v in self._ema.items() if g == group]
+            return max(same) if same else None
+
+
+class AdmissionController:
+    def __init__(self, cfg, model: LatencyModel):
+        self.cfg = cfg
+        self.model = model
+
+    def plan(self, batch: list, queue_len: int):
+        """Split a formed batch into (serve, timeouts) and pick its ef bucket.
+
+        Returns ``(serve, timed_out, ef_bucket, degraded)`` where ``serve``
+        keeps arrival order and ``ef_bucket`` is the bucket the batch will
+        actually run at.
+        """
+        cfg = self.cfg
+        now = time.perf_counter()
+        timed_out = [r for r in batch if r.remaining_ms(now) <= 0]
+        serve = [r for r in batch if r.remaining_ms(now) > 0]
+        if not serve:
+            return [], timed_out, None, False
+
+        group = serve[0].group(cfg)
+        ef = group[0]
+        degraded = False
+        if cfg.degrade:
+            ef, degraded = self._maybe_degrade(serve, group, ef,
+                                               queue_len, now)
+        return serve, timed_out, ef, degraded
+
+    def _maybe_degrade(self, serve, group, ef, queue_len, now):
+        cfg = self.cfg
+        degraded = False
+        # queue pressure: over the degradation depth, drop straight to the
+        # floor bucket — drain fast, recover, stop degrading
+        if queue_len >= cfg.degrade_depth:
+            floor = cfg.ef_buckets[0]
+            return floor, floor < ef
+
+        bucket = cfg.batch_bucket(len(serve))
+        tightest = min(r.remaining_ms(now) for r in serve)
+        while True:
+            est = self.model.predict((ef,) + group[1:], bucket)
+            if est is None or est * 1e3 <= tightest:
+                return ef, degraded
+            lower = cfg.lower_bucket(ef)
+            if lower is None:
+                return ef, degraded     # already at the floor; run anyway
+            ef, degraded = lower, True

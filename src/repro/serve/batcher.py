@@ -1,0 +1,83 @@
+"""Fixed-shape batch execution: pad-to-bucket, run, slice per request.
+
+One program cell is ``SearchParams(ef=bucket, k=k_max, expand, storage)`` at
+one batch bucket ``B``.  A formed batch of ``n <= B`` requests is padded to
+``B`` rows by repeating the last real query — the beam search is ``vmap``-ed
+per query, so a padded lane cannot touch a real lane's beam or results; its
+rows are simply dropped before slicing.  Per-request ``k`` is a prefix slice
+of the shared ``k_max``-wide output: the program's top-k is the sorted head
+of one beam, so ``ids[:k]`` is bit-identical to running the same program
+with ``k`` directly.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.index import SearchParams
+
+
+def params_for(cfg, ef_bucket: int, expand: int, storage: str) -> SearchParams:
+    return SearchParams(ef=ef_bucket, k=cfg.k_max, expand=expand,
+                        storage=storage, use_fee=cfg.use_fee,
+                        use_dfloat=cfg.use_dfloat
+                        or storage == "packed")
+
+
+def run_bucketed(snapshot, cfg, queries: np.ndarray, ef_bucket: int,
+                 expand: int, storage: str, bucket: int | None = None):
+    """Run ``queries`` through the (ef_bucket, expand, storage) program at the
+    padded batch bucket; returns ``(ids, dists, generation, service_s)`` with
+    the padding rows already dropped.  ``bucket`` pins the batch bucket (a
+    test replaying one request against the exact program that served it)."""
+    n = len(queries)
+    bucket = bucket or cfg.batch_bucket(n)
+    if n < bucket:
+        pad = np.repeat(queries[-1:], bucket - n, axis=0)
+        queries = np.concatenate([queries, pad], axis=0)
+    run = snapshot.searcher("local", params_for(cfg, ef_bucket, expand,
+                                                storage))
+    t0 = time.perf_counter()
+    res = run(queries)
+    service_s = time.perf_counter() - t0
+    return res.ids[:n], res.dists[:n], res.generation, service_s
+
+
+def resolve_batch(snapshot, cfg, serve: list, ef_bucket: int, degraded: bool,
+                  model=None) -> float:
+    """Serve one admitted batch and resolve every request future.
+
+    Returns the measured service seconds (also fed back into ``model``)."""
+    from repro.serve.request import Response
+
+    group = serve[0].group(cfg)
+    queries = np.stack([r.query for r in serve])
+    bucket = cfg.batch_bucket(len(serve))
+    t_start = time.perf_counter()
+    ids, dists, gen, service_s = run_bucketed(
+        snapshot, cfg, queries, ef_bucket, group[1], group[2], bucket=bucket)
+    if model is not None:
+        model.observe((ef_bucket,) + group[1:], bucket, service_s)
+    now = time.perf_counter()
+    for i, r in enumerate(serve):
+        total_ms = r.elapsed_ms(now)
+        r.future.set_result(Response(
+            id=r.id, status="ok",
+            ids=np.asarray(ids[i, :r.k]), dists=np.asarray(dists[i, :r.k]),
+            generation=gen, ef_served=ef_bucket, batch_bucket=bucket,
+            degraded=degraded and ef_bucket < r.group(cfg)[0],
+            queue_ms=(t_start - r.t_submit) * 1e3,
+            service_ms=service_s * 1e3, total_ms=total_ms,
+            deadline_missed=total_ms > r.deadline_ms))
+    return service_s
+
+
+def fail_timeouts(timed_out: list) -> None:
+    from repro.serve.request import Response
+
+    now = time.perf_counter()
+    for r in timed_out:
+        r.future.set_result(Response(
+            id=r.id, status="timeout", queue_ms=r.elapsed_ms(now),
+            total_ms=r.elapsed_ms(now), deadline_missed=True))

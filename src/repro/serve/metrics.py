@@ -1,0 +1,93 @@
+"""Serving metrics: latency tail, goodput, degradation, swap accounting.
+
+One :class:`Metrics` instance rides on a server; every resolved response is
+recorded, every generation install appends its :class:`UploadStats`.
+``summary()`` produces the flat dict the bench row / CI report serialises;
+``histogram()`` produces the latency histogram artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+
+class Metrics:
+    def __init__(self, slo_ms: float):
+        self.slo_ms = slo_ms
+        self._lock = threading.Lock()
+        self._lat_ms: list = []        # total_ms of ok responses
+        self._records: list = []       # (status, degraded, deadline_missed)
+        self._swaps: list = []         # UploadStats per install
+        self.cold_start_ms: float | None = None
+        self._t0 = time.perf_counter()
+        self._t_last = self._t0
+
+    def start_clock(self) -> None:
+        with self._lock:
+            self._t0 = time.perf_counter()
+            self._t_last = self._t0
+
+    def record(self, resp) -> None:
+        with self._lock:
+            self._records.append((resp.status, resp.degraded,
+                                  resp.deadline_missed))
+            if resp.status == "ok":
+                self._lat_ms.append(resp.total_ms)
+            self._t_last = time.perf_counter()
+
+    def record_swap(self, stats) -> None:
+        with self._lock:
+            self._swaps.append(stats)
+
+    # -- reporting -----------------------------------------------------------
+    def summary(self) -> dict:
+        with self._lock:
+            lat = np.asarray(self._lat_ms, np.float64)
+            n = len(self._records)
+            ok = sum(1 for s, _, _ in self._records if s == "ok")
+            shed = sum(1 for s, _, _ in self._records if s == "shed")
+            timeout = sum(1 for s, _, _ in self._records if s == "timeout")
+            degraded = sum(1 for _, d, _ in self._records if d)
+            good = sum(1 for s, _, m in self._records
+                       if s == "ok" and not m)
+            elapsed = max(self._t_last - self._t0, 1e-9)
+            out = dict(
+                requests=n, ok=ok, shed=shed, timeout=timeout,
+                degraded=degraded,
+                degraded_fraction=degraded / max(n, 1),
+                goodput_qps=good / elapsed,
+                elapsed_s=elapsed,
+                slo_ms=self.slo_ms,
+                cold_start_ms=self.cold_start_ms,
+            )
+            if len(lat):
+                p50, p99, p999 = np.percentile(lat, [50, 99, 99.9])
+                out.update(p50_ms=float(p50), p99_ms=float(p99),
+                           p999_ms=float(p999), mean_ms=float(lat.mean()),
+                           max_ms=float(lat.max()))
+            if self._swaps:
+                deltas = [s for s in self._swaps if s.mode == "delta"]
+                out["swaps"] = dict(
+                    installs=len(self._swaps),
+                    delta_installs=len(deltas),
+                    h2d_bytes=sum(s.h2d_bytes for s in self._swaps),
+                    max_delta_reupload_fraction=max(
+                        (s.reupload_fraction for s in deltas), default=0.0),
+                    last=dataclasses.asdict(self._swaps[-1]),
+                )
+            return out
+
+    def histogram(self, n_bins: int = 40) -> dict:
+        """Log-spaced latency histogram (the CI artifact payload)."""
+        with self._lock:
+            lat = np.asarray(self._lat_ms, np.float64)
+        if not len(lat):
+            return dict(bins_ms=[], counts=[])
+        lo = max(lat.min(), 1e-3)
+        edges = np.geomspace(lo, max(lat.max(), lo * 1.001), n_bins + 1)
+        counts, _ = np.histogram(lat, bins=edges)
+        return dict(bins_ms=[float(e) for e in edges],
+                    counts=[int(c) for c in counts])

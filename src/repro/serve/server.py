@@ -1,0 +1,166 @@
+"""The serving front door: submit() -> Future[Response].
+
+One :class:`Server` owns
+
+  * a bounded :class:`RequestQueue` (shed-on-full backpressure edge),
+  * a single batcher thread — forms group batches, runs admission, executes
+    the padded fixed-shape program, resolves futures, and installs pending
+    generation swaps *between* batches (the invariant that makes donated
+    prefix splices safe),
+  * optionally a :class:`SnapshotWatcher` thread when serving a
+    :class:`repro.streaming.MutableIndex` — freeze() runs there, off the
+    serving path, and only the device delta ships on install.
+
+``start()`` compiles the whole program lattice before accepting traffic
+(seeding the admission latency model) and records the cold-start-to-first-
+response time; with a persistent compilation cache
+(``repro.serve.warmup.enable_compilation_cache``) that cost collapses to
+cache deserialisation on restart.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.serve.admission import AdmissionController, LatencyModel
+from repro.serve.batcher import fail_timeouts, resolve_batch
+from repro.serve.config import ServeConfig
+from repro.serve.metrics import Metrics
+from repro.serve.queue import RequestQueue
+from repro.serve.request import Request, Response
+from repro.serve.swap import GenerationInstaller, SnapshotWatcher
+from repro.serve.warmup import compile_programs
+
+
+class Server:
+    def __init__(self, index, cfg: ServeConfig | None = None):
+        from repro.streaming import MutableIndex
+
+        self.cfg = cfg or ServeConfig()
+        self.metrics = Metrics(self.cfg.slo_ms)
+        self.queue = RequestQueue(self.cfg.max_queue, self.cfg.shed_on_full)
+        self.model = LatencyModel()
+        self.admission = AdmissionController(self.cfg, self.model)
+        self.installer = GenerationInstaller(self.cfg, self.metrics)
+        self._mutable = index if isinstance(index, MutableIndex) else None
+        self._static = None if self._mutable is not None else index
+        self.watcher: SnapshotWatcher | None = None
+        # retained (generation, snapshot) pairs: lets a client (or test)
+        # re-verify any response against the exact snapshot that served it
+        self.history: deque = deque(maxlen=8)
+        self.warmup_info: dict | None = None
+        self._thread: threading.Thread | None = None
+        self._running = threading.Event()
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "Server":
+        t0 = time.perf_counter()
+        snap = (self._mutable.freeze() if self._mutable is not None
+                else self._static)
+        self.installer.install(snap)
+        if self._mutable is not None:
+            # swaps will happen: compile the delta-splice lattice up front so
+            # a live install never stalls the batcher on a scatter compile
+            self.installer.prewarm()
+        self.history.append((snap.generation, snap))
+        info = compile_programs(snap, self.cfg, self.model)
+        # cold start measured from start() entry: includes the first device
+        # upload and the first program's compile (or cache hit) + run
+        self.metrics.cold_start_ms = (
+            (time.perf_counter() - t0
+             - (info["total_s"] - info["first_response_s"])) * 1e3)
+        self.warmup_info = info
+        self._running.set()
+        self._thread = threading.Thread(target=self._serve_loop, daemon=True,
+                                        name="serve-batcher")
+        self._thread.start()
+        if self._mutable is not None:
+            self.watcher = SnapshotWatcher(self._mutable,
+                                           self.installer.publish,
+                                           poll_s=self.cfg.swap_poll_s)
+            self.watcher.start()
+        self.metrics.start_clock()
+        return self
+
+    def stop(self) -> None:
+        if self.watcher is not None:
+            self.watcher.stop()
+            self.watcher = None
+        self._running.clear()
+        self.queue.close()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+        for r in self.queue.drain():       # fail, don't drop silently
+            r.future.set_result(Response(id=r.id, status="shed",
+                                         queue_ms=r.elapsed_ms(),
+                                         total_ms=r.elapsed_ms()))
+
+    def __enter__(self) -> "Server":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    @property
+    def generation(self):
+        s = self.installer.serving
+        return None if s is None else s.generation
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, query, k: int | None = None, ef: int | None = None,
+               deadline_ms: float | None = None, expand: int | None = None,
+               storage: str | None = None) -> Future:
+        """Enqueue one query; the Future resolves to a Response."""
+        cfg = self.cfg
+        k = cfg.k_max if k is None else k
+        if not 1 <= k <= cfg.k_max:
+            raise ValueError(f"k={k} outside [1, k_max={cfg.k_max}]")
+        storage = storage or cfg.storages[0]
+        if storage not in cfg.storages:
+            raise ValueError(f"storage {storage!r} not served "
+                             f"(configured: {cfg.storages})")
+        req = Request(query=np.asarray(query, np.float32).reshape(-1),
+                      k=k, ef=cfg.ef_buckets[0] if ef is None else ef,
+                      expand=cfg.expand if expand is None else expand,
+                      storage=storage,
+                      deadline_ms=cfg.slo_ms if deadline_ms is None
+                      else deadline_ms)
+        req.future.add_done_callback(self._record)
+        if not self._running.is_set() or not self.queue.put(req):
+            req.future.set_result(Response(id=req.id, status="shed"))
+        return req.future
+
+    def _record(self, fut: Future) -> None:
+        if fut.exception() is None:
+            self.metrics.record(fut.result())
+
+    # -- batcher thread ------------------------------------------------------
+    def _serve_loop(self) -> None:
+        cfg = self.cfg
+        group_of = lambda r: r.group(cfg)
+        while self._running.is_set():
+            if self.installer.maybe_install() is not None:
+                snap = self.installer.serving
+                self.history.append((snap.generation, snap))
+            batch = self.queue.take_group(group_of, cfg.batch_max,
+                                          timeout=0.02,
+                                          linger=cfg.max_wait_ms / 1e3)
+            if not batch:
+                continue
+            serve, timed_out, ef, degraded = self.admission.plan(
+                batch, len(self.queue))
+            fail_timeouts(timed_out)
+            if not serve:
+                continue
+            try:
+                resolve_batch(self.installer.serving, cfg, serve, ef,
+                              degraded, self.model)
+            except Exception as e:        # fail the batch, keep serving
+                for r in serve:
+                    if not r.future.done():
+                        r.future.set_exception(e)

@@ -1,0 +1,114 @@
+"""Zero-downtime snapshot hot-swap.
+
+A :class:`SnapshotWatcher` thread subscribes to a
+:class:`repro.streaming.MutableIndex` generation listener (plus a fallback
+poll) and, whenever the write stream has advanced, calls ``freeze()`` off
+the serving path and publishes the snapshot as the server's *pending*
+generation.  The batcher thread — the only consumer of device arrays —
+installs the pending snapshot *between* batches via
+:class:`repro.index.DeviceCache`, so:
+
+  * in-flight batches always finish on the generation they started on;
+  * the donated-prefix splice never invalidates a buffer any program is
+    reading (nothing is in flight at install time);
+  * a swap ships only the appended payload tail, dirtied adjacency rows and
+    tombstone words (byte-accounted in ``UploadStats``).
+
+The retired generation's device arrays are dropped right after the install —
+with donation they were consumed by the splice anyway.
+"""
+from __future__ import annotations
+
+import threading
+
+
+class SnapshotWatcher:
+    """Background freeze()-er: MutableIndex generations -> pending snapshots."""
+
+    def __init__(self, mutable, publish, poll_s: float = 0.25):
+        self.mutable = mutable
+        self.publish = publish          # fn(snapshot) -> None
+        self.poll_s = poll_s
+        self._dirty = threading.Event()
+        self._stop = threading.Event()
+        self._listener = None
+        self._thread = None
+        self._last_gen = None
+
+    def start(self) -> None:
+        self._listener = self.mutable.add_listener(
+            lambda gen: self._dirty.set())
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="serve-snapshot-watcher")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._dirty.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+        if self._listener is not None:
+            self.mutable.remove_listener(self._listener)
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self._dirty.wait(self.poll_s)
+            self._dirty.clear()
+            if self._stop.is_set():
+                return
+            gen = self.mutable.generation
+            if gen == self._last_gen:
+                continue
+            snap = self.mutable.freeze()   # thread-safe; off the serve path
+            self._last_gen = snap.generation
+            self.publish(snap)
+
+
+class GenerationInstaller:
+    """Between-batches device install of a pending snapshot.
+
+    Owns one :class:`DeviceCache` per configured storage; ``maybe_install``
+    is called by the batcher thread only, which is what makes prefix
+    donation safe.
+    """
+
+    def __init__(self, cfg, metrics=None):
+        from repro.index import DeviceCache
+
+        self.caches = {st: DeviceCache(storage=st,
+                                       use_dfloat=cfg.use_dfloat
+                                       or st == "packed",
+                                       donate=cfg.donate)
+                       for st in cfg.storages}
+        self.metrics = metrics
+        self._pending = None
+        self._lock = threading.Lock()
+        self.serving = None
+
+    def prewarm(self, max_updates: int | None = None) -> int:
+        """Compile every scatter-splice program delta installs can hit, so a
+        live swap never pays a compile on the serving path."""
+        return sum(c.prewarm(max_updates) for c in self.caches.values())
+
+    def publish(self, snapshot) -> None:
+        with self._lock:
+            self._pending = snapshot
+
+    def install(self, snapshot):
+        """Upload/splice ``snapshot`` and make it the serving generation."""
+        stats = [c.install(snapshot) for c in self.caches.values()]
+        old, self.serving = self.serving, snapshot
+        if old is not None and old is not snapshot:
+            old.drop_device()    # donated buffers are dead; searchers stale
+        if self.metrics is not None:
+            for s in stats:
+                self.metrics.record_swap(s)
+        return stats
+
+    def maybe_install(self):
+        """Install the pending snapshot if there is one (batcher thread)."""
+        with self._lock:
+            snap, self._pending = self._pending, None
+        if snap is None or snap is self.serving:
+            return None
+        return self.install(snap)

@@ -34,6 +34,7 @@ bit-for-bit and searches return bit-identical results.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from pathlib import Path
 
@@ -112,6 +113,34 @@ class MutableIndex:
         self._wal: list[tuple[str, np.ndarray]] = []   # ops since save_delta
         self._delta_seq = 0           # next delta segment number on disk
         self._delta_path = None       # directory the delta log is bound to
+        # serving-tier hooks: mutations and freeze() are serialized by this
+        # reentrant lock (a snapshot watcher may freeze from another thread
+        # while a writer appends), and every generation bump notifies the
+        # registered listeners (hot-swap triggers).  Listeners run under the
+        # lock and must be fast and non-reentrant — set an event, return.
+        self._lock = threading.RLock()
+        self._listeners: list = []
+
+    # -- serving-tier hooks --------------------------------------------------
+    def add_listener(self, fn):
+        """Register ``fn(generation)`` to fire after every generation bump
+        (append / delete / repair drain).  Called under the mutation lock —
+        keep it O(1) (set an event; the serving tier's snapshot watcher does
+        exactly that).  Returns ``fn`` for symmetric ``remove_listener``."""
+        with self._lock:
+            self._listeners.append(fn)
+        return fn
+
+    def remove_listener(self, fn) -> None:
+        with self._lock:
+            if fn in self._listeners:
+                self._listeners.remove(fn)
+
+    def _bump(self) -> None:
+        self.generation += 1
+        self._snapshot = None
+        for fn in list(self._listeners):
+            fn(self.generation)
 
     # -- trivia --------------------------------------------------------------
     @property
@@ -215,16 +244,16 @@ class MutableIndex:
         if vectors.shape[1] != self.base.dim:
             raise ValueError(f"append dim {vectors.shape[1]} != index dim "
                              f"{self.base.dim}")
-        if _log:
-            self._wal.append(("append", vectors.copy()))
-        t0 = time.perf_counter()
-        ids = np.arange(self._n, self._n + len(vectors), dtype=np.int32)
-        for s in range(0, len(vectors), self.sub_batch):
-            self._append_batch(vectors[s : s + self.sub_batch])
-        self.stats.rows_appended += len(vectors)
-        self.stats.append_s += time.perf_counter() - t0
-        self.generation += 1
-        self._snapshot = None
+        with self._lock:
+            if _log:
+                self._wal.append(("append", vectors.copy()))
+            t0 = time.perf_counter()
+            ids = np.arange(self._n, self._n + len(vectors), dtype=np.int32)
+            for s in range(0, len(vectors), self.sub_batch):
+                self._append_batch(vectors[s : s + self.sub_batch])
+            self.stats.rows_appended += len(vectors)
+            self.stats.append_s += time.perf_counter() - t0
+            self._bump()
         return ids
 
     def _append_batch(self, batch: np.ndarray):
@@ -294,17 +323,17 @@ class MutableIndex:
         """Tombstone rows: O(1) bitmap flips; in-edges are patched lazily at
         the next snapshot boundary.  Idempotent; returns newly-dead count."""
         ids = np.atleast_1d(np.asarray(ids, np.int64))
-        if len(ids) and (ids.min() < 0 or ids.max() >= self._n):
-            raise ValueError(f"delete ids out of range [0, {self._n})")
-        if _log:
-            self._wal.append(("delete", ids.copy()))
-        fresh = ids[~self._dead[ids]]
-        self._dead[fresh] = True
-        self._pending_repair.extend(int(i) for i in fresh)
-        self.stats.rows_deleted += len(fresh)
-        if len(fresh):
-            self.generation += 1
-            self._snapshot = None
+        with self._lock:
+            if len(ids) and (ids.min() < 0 or ids.max() >= self._n):
+                raise ValueError(f"delete ids out of range [0, {self._n})")
+            if _log:
+                self._wal.append(("delete", ids.copy()))
+            fresh = ids[~self._dead[ids]]
+            self._dead[fresh] = True
+            self._pending_repair.extend(int(i) for i in fresh)
+            self.stats.rows_deleted += len(fresh)
+            if len(fresh):
+                self._bump()
         return len(fresh)
 
     def repair(self, _log: bool = True) -> int:
@@ -317,13 +346,19 @@ class MutableIndex:
         nodes the tombstones pointed at — shortcuts alone don't restore
         that direction).  Returns the number of tombstones drained.
         """
-        if not self._pending_repair:
-            return 0
-        dead_ids = np.unique(np.asarray(self._pending_repair, np.int64))
-        self._pending_repair.clear()
-        return self._drain_repair(dead_ids, _log=_log)
+        with self._lock:
+            if not self._pending_repair:
+                return 0
+            dead_ids = np.unique(np.asarray(self._pending_repair, np.int64))
+            self._pending_repair.clear()
+            return self._drain_repair(dead_ids, _log=_log)
 
     def _drain_repair(self, dead_ids: np.ndarray, _log: bool = True) -> int:
+        with self._lock:
+            return self._drain_repair_locked(dead_ids, _log=_log)
+
+    def _drain_repair_locked(self, dead_ids: np.ndarray,
+                             _log: bool = True) -> int:
         t0 = time.perf_counter()
         if _log:
             self._wal.append(("repair", dead_ids.copy()))
@@ -365,8 +400,7 @@ class MutableIndex:
                                                  len(affected))))
         self.stats.repairs_drained += len(dead_ids)
         self.stats.repair_s += time.perf_counter() - t0
-        self.generation += 1
-        self._snapshot = None
+        self._bump()
         return len(dead_ids)
 
     def _relink_starved(self, affected: np.ndarray):
@@ -406,22 +440,26 @@ class MutableIndex:
         backend through the FEE exit mask.  Snapshots are cached per
         generation, and later mutations never touch a snapshot's arrays.
         """
-        self.repair()
-        if self._snapshot is not None and self._snapshot[0] == self.generation:
-            return self._snapshot[1]
-        timings = dict(self.base.timings)
-        # ride the mutation counters on the snapshot so the ndpsim backend
-        # can account append/repair traffic as write bursts (SimResult.writes)
-        timings["mutation"] = dataclasses.asdict(self.stats)
-        idx = Index(spec=self.spec, spca=self.spca, fee=self.fee,
-                    dfloat_cfg=self.dfloat_cfg, graph=self._graph_view(),
-                    db_rot=self._rot, db_packed=self._packed,
-                    timings=timings,
-                    tombstone=pack_tombstone(self._dead),
-                    generation=self.generation)
-        self._adj_shared = True
-        self._snapshot = (self.generation, idx)
-        return idx
+        with self._lock:
+            self.repair()
+            if (self._snapshot is not None
+                    and self._snapshot[0] == self.generation):
+                return self._snapshot[1]
+            timings = dict(self.base.timings)
+            # ride the mutation counters on the snapshot so the ndpsim backend
+            # can account append/repair traffic as write bursts
+            # (SimResult.writes)
+            timings["mutation"] = dataclasses.asdict(self.stats)
+            idx = Index(spec=self.spec, spca=self.spca, fee=self.fee,
+                        dfloat_cfg=self.dfloat_cfg, graph=self._graph_view(),
+                        db_rot=self._rot, db_packed=self._packed,
+                        timings=timings,
+                        tombstone=pack_tombstone(self._dead),
+                        generation=self.generation,
+                        n_rows=self._n)
+            self._adj_shared = True
+            self._snapshot = (self.generation, idx)
+            return idx
 
     def searcher(self, backend: str = "local",
                  params: SearchParams | None = None, **opts):
