@@ -4,19 +4,38 @@ Design (DESIGN.md §7):
   * arrays are saved in their GLOBAL logical shape (device_get gathers
     shards), so a checkpoint written on a 256-chip mesh restores onto 4
     chips or 512 — this is what makes elastic scaling trivial;
-  * atomic: write into ``<dir>.tmp`` then rename;
+  * atomic AND crash-ordered: write into ``<dir>.tmp`` (fsync), rename the
+    previous checkpoint aside to ``<dir>.old``, rename the replacement in,
+    then remove the old — the last durable state is never deleted before the
+    replacement is fully on disk, so a crash in *any* window leaves either
+    the old or the new checkpoint recoverable (``_recover_dir``);
+  * verified: the manifest records a per-array checksum
+    (``repro.resilience.checksum``); ``restore`` re-checks every array and
+    raises :class:`~repro.resilience.CorruptArtifactError` on a flipped bit
+    or torn tail instead of returning garbage;
   * async: the serialize+write runs on a writer thread (training continues);
   * manifest carries step + user metadata for restart logic.
+
+Crash windows (all fault-injectable, see ``repro.resilience.faults``):
+
+    ckpt.write_arrays   arrays.npz torn mid-write  -> stale ``.tmp``, ignored
+    ckpt.pre_swap       tmp complete, no swap yet  -> stale ``.tmp``, ignored
+    ckpt.mid_swap       old renamed aside          -> ``.old`` renamed back
+    ckpt.post_swap      new in place, old lingers  -> ``.old`` removed
 """
 from __future__ import annotations
 
 import json
+import os
 import shutil
 import threading
 from pathlib import Path
 
 import jax
 import numpy as np
+
+from repro.resilience import checksum as cks
+from repro.resilience import faults
 
 
 def _flatten(tree):
@@ -26,6 +45,43 @@ def _flatten(tree):
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
         out[key] = leaf
     return out, treedef
+
+
+def _fsync_path(path: Path) -> None:
+    """fsync one file (or directory entry) — crash durability, not atomicity."""
+    flags = os.O_RDONLY | (os.O_DIRECTORY if path.is_dir() else 0)
+    try:
+        fd = os.open(path, flags)
+    except OSError:
+        return          # platforms without O_DIRECTORY dir-fsync support
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _old_dir(ckpt_dir: Path) -> Path:
+    return ckpt_dir.with_suffix(".old")
+
+
+def _recover_dir(ckpt_dir: Path) -> bool:
+    """Heal the crash windows of :func:`save` for one checkpoint directory.
+
+    * ``<dir>`` missing but ``<dir>.old`` present (crash mid-swap): the old
+      checkpoint is the last durable state — rename it back.
+    * both present (crash post-swap): the replacement won — drop ``.old``.
+
+    Returns True when ``ckpt_dir`` exists afterwards.
+    """
+    old = _old_dir(ckpt_dir)
+    if ckpt_dir.exists():
+        if old.exists():
+            shutil.rmtree(old)
+        return True
+    if old.exists() and (old / "manifest.json").exists():
+        old.rename(ckpt_dir)
+        return True
+    return ckpt_dir.exists()
 
 
 def save(ckpt_dir: str | Path, step: int, tree, metadata: dict | None = None,
@@ -46,11 +102,29 @@ def save(ckpt_dir: str | Path, step: int, tree, metadata: dict | None = None,
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
         np.savez(tmp / "arrays.npz", **host)
+        faults.fault_point("ckpt.write_arrays", path=tmp / "arrays.npz")
         (tmp / "manifest.json").write_text(json.dumps(dict(
-            step=step, keys=sorted(host), dtypes=dtypes, metadata=metadata or {})))
+            step=step, keys=sorted(host), dtypes=dtypes,
+            checksums=cks.manifest_checksums(host),
+            metadata=metadata or {})))
+        _fsync_path(tmp / "arrays.npz")
+        _fsync_path(tmp / "manifest.json")
+        _fsync_path(tmp)
+        faults.fault_point("ckpt.pre_swap")
+        # crash-ordered swap: the previous checkpoint is renamed ASIDE (not
+        # deleted) until the replacement is fully in place — a crash between
+        # the two renames loses nothing (_recover_dir renames .old back)
+        old = _old_dir(ckpt_dir)
+        if old.exists():
+            shutil.rmtree(old)          # leftover from an earlier crash
         if ckpt_dir.exists():
-            shutil.rmtree(ckpt_dir)
+            ckpt_dir.rename(old)
+            faults.fault_point("ckpt.mid_swap")
         tmp.rename(ckpt_dir)
+        faults.fault_point("ckpt.post_swap")
+        _fsync_path(ckpt_dir.parent)
+        if old.exists():
+            shutil.rmtree(old)
 
     if async_write:
         t = threading.Thread(target=_write, daemon=True)
@@ -65,15 +139,21 @@ def steps(base_dir: str | Path) -> list[int]:
 
     Used by restart logic (``latest_step``) and by the streaming-mutation
     delta log, which replays *every* segment in order, not just the newest.
+    Heals crash leftovers first: a ``step_N.old`` whose ``step_N`` vanished
+    mid-swap is renamed back (it IS the last durable state).
     """
     base = Path(base_dir)
     if not base.exists():
         return []
+    for d in list(base.iterdir()):
+        if d.name.endswith(".old"):
+            _recover_dir(d.with_suffix(""))
     out = []
     for d in base.iterdir():
         # a crash can leave a half-written ``step_N.tmp`` behind (the writer
         # renames it into place only on completion) — never resume from one
         if not (d.is_dir() and d.name.startswith("step_")
+                and not d.name.endswith((".tmp", ".old"))
                 and (d / "manifest.json").exists()):
             continue
         suffix = d.name.split("_", 1)[1]
@@ -90,18 +170,41 @@ def latest_step(base_dir: str | Path) -> int | None:
 def restore(ckpt_dir: str | Path, abstract_tree, shardings=None):
     """Restore into the structure of ``abstract_tree``; if ``shardings``
     (matching pytree of NamedSharding) is given, place shards directly on the
-    target mesh — the mesh may differ from the one that wrote the ckpt."""
+    target mesh — the mesh may differ from the one that wrote the ckpt.
+
+    Verifies every array against the manifest's recorded checksums (when
+    present) and raises :class:`~repro.resilience.CorruptArtifactError` on
+    corruption instead of restoring garbage state.
+    """
     ckpt_dir = Path(ckpt_dir)
-    manifest = json.loads((ckpt_dir / "manifest.json").read_text())
+    _recover_dir(ckpt_dir)
+    try:
+        manifest = json.loads((ckpt_dir / "manifest.json").read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise cks.CorruptArtifactError(
+            f"{ckpt_dir}: unreadable manifest.json ({e})") from e
     dtypes = manifest.get("dtypes", {})
-    with np.load(ckpt_dir / "arrays.npz") as z:
-        host = {}
-        for k in z.files:
-            a = z[k]
-            if dtypes.get(k) == "bfloat16":
-                import ml_dtypes
-                a = a.view(ml_dtypes.bfloat16)
-            host[k] = a
+    try:
+        with np.load(ckpt_dir / "arrays.npz") as z:
+            raw = {k: faults.corrupt("ckpt.read_arrays", z[k])
+                   for k in z.files}
+    except cks.CorruptArtifactError:
+        raise
+    except Exception as e:      # truncated/torn zip containers raise variously
+        raise cks.CorruptArtifactError(
+            f"{ckpt_dir}: unreadable arrays.npz ({e}) — torn write?") from e
+    missing_files = set(manifest.get("keys", raw)) - set(raw)
+    if missing_files:
+        raise cks.CorruptArtifactError(
+            f"{ckpt_dir}: arrays.npz is missing manifest keys "
+            f"{sorted(missing_files)[:5]} — torn write?")
+    cks.verify_arrays(raw, manifest.get("checksums"), ckpt_dir)
+    host = {}
+    for k, a in raw.items():
+        if dtypes.get(k) == "bfloat16":
+            import ml_dtypes
+            a = a.view(ml_dtypes.bfloat16)
+        host[k] = a
     flat_abs, treedef = _flatten(abstract_tree)
     missing = set(flat_abs) - set(host)
     if missing:

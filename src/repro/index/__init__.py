@@ -13,5 +13,7 @@ from repro.core.fee import FeeParams  # noqa: F401  (re-export: typed pytree)
 from repro.index.backends import BACKENDS  # noqa: F401
 from repro.index.device import DeviceCache, UploadStats  # noqa: F401
 from repro.index.index import Index  # noqa: F401
+from repro.resilience import CorruptArtifactError  # noqa: F401  (re-export:
+#   what load()/restore raise on checksum mismatch or torn artifacts)
 from repro.index.types import (  # noqa: F401
     FeeFit, IndexSpec, SearchParams, SearchResult)

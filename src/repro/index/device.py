@@ -88,6 +88,16 @@ class DeviceCache:
         self._prev_n = 0           # its allocated row count
         self._db = self._adj = self._tomb = None   # device arrays
 
+    def reset(self) -> None:
+        """Forget the resident generation (next install is a full upload).
+
+        Used by swap rollback: a failed install may have consumed the donated
+        buffers mid-splice, so neither the old nor the new device arrays can
+        be trusted afterwards."""
+        self._prev = None
+        self._prev_n = 0
+        self._db = self._adj = self._tomb = None
+
     # -- host-side views ----------------------------------------------------
     def _host_db_full(self, idx) -> np.ndarray:
         if self.storage == "packed":

@@ -36,6 +36,9 @@ from repro.core import search as search_mod
 from repro.data.synthetic import VecDB, exact_topk, recall_at_k
 from repro.index import backends as backends_mod
 from repro.index.types import FeeFit, IndexSpec, SearchParams, SearchResult
+from repro.resilience import CorruptArtifactError
+from repro.resilience import checksum as cks
+from repro.resilience import faults
 
 FORMAT_VERSION = 2          # v2 dropped the persisted db_q copy
 DELTA_FORMAT_VERSION = 3    # v3: streaming-mutation delta segments (WAL),
@@ -273,7 +276,6 @@ class Index:
             meta["generation"] = self.generation
         if self.n_rows is not None:
             meta["n_rows"] = self.n_rows
-        (path / "spec.json").write_text(json.dumps(meta, indent=1))
         arrays = dict(
             spca_mean=self.spca.mean, spca_components=self.spca.components,
             spca_eigvals=self.spca.eigvals,
@@ -290,6 +292,11 @@ class Index:
         for i, (ids, adj) in enumerate(self.graph.levels):
             arrays[f"g_ids{i}"] = ids
             arrays[f"g_adj{i}"] = adj
+        # per-array checksums ride in the manifest (still format v2: an
+        # additive optional field) so load() detects a flipped bit or torn
+        # tail instead of serving garbage neighbors
+        meta["checksums"] = cks.manifest_checksums(arrays)
+        (path / "spec.json").write_text(json.dumps(meta, indent=1))
         np.savez_compressed(path / "arrays.npz", **arrays)
         return path
 
@@ -317,8 +324,17 @@ class Index:
                 f"unsupported index format v{version} at {path}: this build "
                 f"reads formats {KNOWN_FORMATS}{hint}")
         spec = IndexSpec(**meta["spec"])
-        with np.load(path / "arrays.npz", allow_pickle=False) as z:
-            a = {k: z[k] for k in z.files}
+        try:
+            with np.load(path / "arrays.npz", allow_pickle=False) as z:
+                a = {k: faults.corrupt("index.read_arrays", z[k])
+                     for k in z.files}
+        except Exception as e:   # truncated/torn zip containers raise variously
+            raise CorruptArtifactError(
+                f"{path}: unreadable arrays.npz ({e}) — torn write or "
+                "truncated artifact") from e
+        # verify every persisted array against the manifest's recorded
+        # checksums (absent on pre-checksum artifacts: nothing to verify)
+        cks.verify_arrays(a, meta.get("checksums"), path)
         spca = pca_mod.SPCA(mean=a["spca_mean"], components=a["spca_components"],
                             eigvals=a["spca_eigvals"], metric=spec.metric)
         fee = FeeFit(alpha=a["fee_alpha"], beta=a["fee_beta"],

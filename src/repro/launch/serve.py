@@ -124,7 +124,11 @@ def _serve_main(argv):
 
 def _print_summary(s):
     print(f"requests: {s['requests']}  ok: {s['ok']}  shed: {s['shed']}  "
-          f"timeout: {s['timeout']}  degraded: {s['degraded']}")
+          f"timeout: {s['timeout']}  degraded: {s['degraded']}  "
+          f"errors: {s.get('errors', 0)}")
+    if s.get("events"):
+        print("resilience events: "
+              + "  ".join(f"{k}: {v}" for k, v in sorted(s["events"].items())))
     if "p50_ms" in s:
         print(f"latency ms: p50 {s['p50_ms']:.2f}  p99 {s['p99_ms']:.2f}  "
               f"p999 {s['p999_ms']:.2f}  (p999/p50 "
@@ -140,9 +144,10 @@ def _print_summary(s):
 
 def _gate(args, s) -> int:
     rc = 0
-    if args.check_no_failures and (s["shed"] or s["timeout"]):
-        print(f"CHECK FAILED: {s['shed']} shed + {s['timeout']} timeout "
-              "responses (expected none)")
+    if args.check_no_failures and (s["shed"] or s["timeout"]
+                                   or s.get("errors", 0)):
+        print(f"CHECK FAILED: {s['shed']} shed + {s['timeout']} timeout + "
+              f"{s.get('errors', 0)} errored responses (expected none)")
         rc = 1
     if args.check_p99_ms is not None:
         p99 = s.get("p99_ms")

@@ -1,0 +1,31 @@
+"""repro.resilience — deterministic fault injection + artifact integrity.
+
+    from repro.resilience import FaultPlan, FaultSpec, active_plan
+
+    plan = FaultPlan({"serve.batch_exec": FaultSpec("poison", at=(3,))}, seed=7)
+    with active_plan(plan):
+        ...                       # every chaos failure replays exactly
+    print(plan.log())             # the fault-event artifact
+
+The package has two halves:
+
+  * :mod:`repro.resilience.faults` — seeded :class:`FaultPlan` schedules over
+    named injection points registered at every I/O and serve-loop boundary
+    (checkpoint swap windows, WAL segment writes, batch execution, hot-swap
+    device uploads).  Zero-cost when no plan is installed.
+  * :mod:`repro.resilience.checksum` — per-array artifact checksums and
+    :class:`CorruptArtifactError`, the error every loader raises instead of
+    serving a corrupted payload.
+
+The durability/self-healing machinery this validates lives where the data
+lives: crash-ordered ``ft.checkpoint.save``, quarantine-and-replay WAL
+recovery in ``repro.streaming.delta``, and batch bisection / watchdog /
+circuit breaker / swap rollback in ``repro.serve``.  The chaos driver is
+``python -m repro.launch.chaos``.
+"""
+from repro.resilience.checksum import (  # noqa: F401
+    ALGO, CorruptArtifactError, checksum_array, checksum_bytes,
+    manifest_checksums, verify_arrays)
+from repro.resilience.faults import (  # noqa: F401
+    FaultEvent, FaultPlan, FaultSpec, InjectedCrash, InjectedFault,
+    active_plan, corrupt, current_plan, fault_point, install_plan)

@@ -10,9 +10,12 @@
 Continuous dynamic batching over a fixed program lattice (no retraces under
 live traffic), SLO-aware admission with timeout / shed / ef degradation, and
 zero-downtime generation hot-swap with donated-prefix device uploads.
+Self-healing under failure: batch bisection, a failure circuit breaker,
+a batcher watchdog, and hot-swap rollback (see ``ServeConfig`` knobs).
 """
 from repro.serve.admission import (  # noqa: F401
-    AdmissionController, LatencyModel)
+    AdmissionController, CircuitBreaker, LatencyModel)
+from repro.serve.batcher import resolve_batch, resolve_batch_safe  # noqa: F401
 from repro.serve.config import ServeConfig  # noqa: F401
 from repro.serve.loadgen import run_load  # noqa: F401
 from repro.serve.metrics import Metrics  # noqa: F401

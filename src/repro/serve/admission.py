@@ -1,4 +1,5 @@
-"""SLO-aware admission: latency prediction, timeout, and ef degradation.
+"""SLO-aware admission: latency prediction, timeout, ef degradation, and the
+failure circuit breaker.
 
 The controller keeps an EMA of observed service time per
 ``(group, batch_bucket)`` cell — seeded by the warmup timings, refined by
@@ -14,11 +15,71 @@ live traffic — and uses it at batch-formation time to decide, per batch:
 Degrading the whole batch — not single requests — keeps the group key
 uniform so the batch still runs as one program.  ``k`` never degrades:
 ``k_max <= min(ef_buckets)`` guarantees any bucket can serve any k.
+
+The controller also owns a :class:`CircuitBreaker`: when whole batches keep
+failing (a wedged device, a poisoned generation — not a single poisoned
+request, which bisection isolates), serving every queued request into the
+failure only burns deadline budget.  After ``breaker_threshold`` consecutive
+total-batch failures the breaker *opens* (requests shed fast, no device
+work); after ``breaker_cooldown_s`` it goes *half-open* and lets exactly one
+probe batch through — success closes it, failure re-opens.
 """
 from __future__ import annotations
 
 import threading
 import time
+
+
+class CircuitBreaker:
+    """Consecutive-failure breaker: closed -> open -> half-open -> closed.
+
+    Driven by the single batcher thread (``allow`` before each batch,
+    ``record`` after), but locked anyway: a watchdog restart can briefly
+    overlap an abandoned batcher's last ``record``.
+    """
+
+    def __init__(self, threshold: int, cooldown_s: float):
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self.state = "closed"             # "closed" | "open" | "half_open"
+        self.failures = 0                 # consecutive whole-batch failures
+        self.trips = 0
+        self._open_until = 0.0
+        self._lock = threading.Lock()
+
+    def allow(self, now: float | None = None) -> bool:
+        """May the next batch run?  False -> shed it without device work."""
+        now = time.perf_counter() if now is None else now
+        with self._lock:
+            if self.state == "closed":
+                return True
+            if self.state == "open":
+                if now < self._open_until:
+                    return False
+                self.state = "half_open"  # cooldown over: one probe batch
+                return True
+            return False                  # half_open: probe already in flight
+
+    def record(self, ok: bool, now: float | None = None) -> bool:
+        """Record one batch outcome; returns True when this call tripped
+        (closed/half-open -> open) so the caller can log the event."""
+        now = time.perf_counter() if now is None else now
+        with self._lock:
+            if ok:
+                self.state = "closed"
+                self.failures = 0
+                return False
+            if self.state == "half_open":
+                self.state = "open"       # probe failed: back to shedding
+                self._open_until = now + self.cooldown_s
+                return True
+            self.failures += 1
+            if self.state == "closed" and self.failures >= self.threshold:
+                self.state = "open"
+                self.trips += 1
+                self._open_until = now + self.cooldown_s
+                return True
+            return False
 
 
 class LatencyModel:
@@ -51,6 +112,8 @@ class AdmissionController:
     def __init__(self, cfg, model: LatencyModel):
         self.cfg = cfg
         self.model = model
+        self.breaker = CircuitBreaker(cfg.breaker_threshold,
+                                      cfg.breaker_cooldown_s)
 
     def plan(self, batch: list, queue_len: int):
         """Split a formed batch into (serve, timeouts) and pick its ef bucket.

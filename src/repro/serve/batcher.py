@@ -8,6 +8,12 @@ rows are simply dropped before slicing.  Per-request ``k`` is a prefix slice
 of the shared ``k_max``-wide output: the program's top-k is the sorted head
 of one beam, so ``ids[:k]`` is bit-identical to running the same program
 with ``k`` directly.
+
+``resolve_batch_safe`` wraps ``resolve_batch`` with bisection retry: when a
+batch fails, the two halves are retried independently, recursively, until the
+failure is pinned to single requests — so one poisoned query fails exactly
+one future instead of taking its 31 batchmates down with it.  Padding makes
+a half-batch run the same program lattice, just at a smaller batch bucket.
 """
 from __future__ import annotations
 
@@ -16,6 +22,7 @@ import time
 import numpy as np
 
 from repro.index import SearchParams
+from repro.resilience import InjectedCrash, fault_point
 
 
 def params_for(cfg, ef_bucket: int, expand: int, storage: str) -> SearchParams:
@@ -51,6 +58,7 @@ def resolve_batch(snapshot, cfg, serve: list, ef_bucket: int, degraded: bool,
     Returns the measured service seconds (also fed back into ``model``)."""
     from repro.serve.request import Response
 
+    fault_point("serve.batch_exec", ids=[r.id for r in serve])
     group = serve[0].group(cfg)
     queries = np.stack([r.query for r in serve])
     bucket = cfg.batch_bucket(len(serve))
@@ -71,6 +79,40 @@ def resolve_batch(snapshot, cfg, serve: list, ef_bucket: int, degraded: bool,
             service_ms=service_s * 1e3, total_ms=total_ms,
             deadline_missed=total_ms > r.deadline_ms))
     return service_s
+
+
+def resolve_batch_safe(snapshot, cfg, serve: list, ef_bucket: int,
+                       degraded: bool, model=None, metrics=None,
+                       bisect: bool = True) -> tuple:
+    """``resolve_batch`` with bisection retry; returns ``(n_ok, n_failed)``.
+
+    A failing batch is split in half and each half retried independently,
+    recursively, until failures are isolated to single requests — those
+    futures get the exception, everything else still gets its result.
+    ``InjectedCrash`` is never healed: it simulates process death and must
+    propagate to the serve loop (where the watchdog takes over).
+    """
+    try:
+        resolve_batch(snapshot, cfg, serve, ef_bucket, degraded, model=model)
+        return len(serve), 0
+    except InjectedCrash:
+        raise
+    except Exception as e:
+        if len(serve) == 1 or not bisect:
+            for r in serve:
+                if not r.future.done():
+                    r.future.set_exception(e)
+                if metrics is not None:
+                    metrics.record_error(e)
+            return 0, len(serve)
+        mid = len(serve) // 2
+        ok_l, bad_l = resolve_batch_safe(snapshot, cfg, serve[:mid],
+                                         ef_bucket, degraded, model=model,
+                                         metrics=metrics, bisect=bisect)
+        ok_r, bad_r = resolve_batch_safe(snapshot, cfg, serve[mid:],
+                                         ef_bucket, degraded, model=model,
+                                         metrics=metrics, bisect=bisect)
+        return ok_l + ok_r, bad_l + bad_r
 
 
 def fail_timeouts(timed_out: list) -> None:

@@ -41,6 +41,17 @@ class ServeConfig:
     swap_poll_s: float = 0.25           # fallback poll for snapshot changes
     donate: bool = True                 # donate the prefix on generation swap
 
+    # -- resilience / self-healing ------------------------------------------
+    bisect_retry: bool = True           # a failing batch is bisected so one
+                                        # poisoned request fails alone
+    breaker_threshold: int = 5          # consecutive whole-batch failures
+                                        # that trip the circuit breaker
+    breaker_cooldown_s: float = 1.0     # open -> half-open probe delay
+    watchdog: bool = True               # monitor + restart the batcher thread
+    watchdog_poll_s: float = 0.25
+    watchdog_stall_s: float = 5.0       # heartbeat age that declares the
+                                        # batcher wedged (hung device call)
+
     # -- warmup --------------------------------------------------------------
     compilation_cache_dir: str | None = None   # persistent jit cache (warm
                                                # start); must be set before
@@ -63,6 +74,10 @@ class ServeConfig:
                 raise ValueError(f"unknown storage {st!r}")
         if "packed" in self.storages and not self.use_dfloat:
             raise ValueError('storage "packed" requires use_dfloat=True')
+        if self.breaker_threshold < 1:
+            raise ValueError("breaker_threshold must be >= 1")
+        if self.watchdog_stall_s <= 0 or self.watchdog_poll_s <= 0:
+            raise ValueError("watchdog intervals must be positive")
 
     # -- bucket arithmetic ---------------------------------------------------
     def ef_bucket(self, ef: int) -> int:

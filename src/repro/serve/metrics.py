@@ -21,6 +21,9 @@ class Metrics:
         self._lat_ms: list = []        # total_ms of ok responses
         self._records: list = []       # (status, degraded, deadline_missed)
         self._swaps: list = []         # UploadStats per install
+        self._errors = 0               # futures resolved with an exception
+        self._events: dict = {}        # resilience event counters (breaker
+                                       # trips, watchdog restarts, rollbacks)
         self.cold_start_ms: float | None = None
         self._t0 = time.perf_counter()
         self._t_last = self._t0
@@ -42,6 +45,19 @@ class Metrics:
         with self._lock:
             self._swaps.append(stats)
 
+    def record_error(self, exc: BaseException | None = None) -> None:
+        """A request future was resolved with an exception (poisoned query,
+        batch execution failure that bisection could not isolate away)."""
+        with self._lock:
+            self._errors += 1
+            self._t_last = time.perf_counter()
+
+    def record_event(self, name: str, n: int = 1) -> None:
+        """Count a named resilience event (``breaker_trip``,
+        ``watchdog_restart_stalled``, ``swap_rollback``, ...)."""
+        with self._lock:
+            self._events[name] = self._events.get(name, 0) + n
+
     # -- reporting -----------------------------------------------------------
     def summary(self) -> dict:
         with self._lock:
@@ -62,7 +78,10 @@ class Metrics:
                 elapsed_s=elapsed,
                 slo_ms=self.slo_ms,
                 cold_start_ms=self.cold_start_ms,
+                errors=self._errors,
             )
+            if self._events:
+                out["events"] = dict(self._events)
             if len(lat):
                 p50, p99, p999 = np.percentile(lat, [50, 99, 99.9])
                 out.update(p50_ms=float(p50), p99_ms=float(p99),

@@ -16,6 +16,15 @@ One :class:`Server` owns
 response time; with a persistent compilation cache
 (``repro.serve.warmup.enable_compilation_cache``) that cost collapses to
 cache deserialisation on restart.
+
+Self-healing (all knobs on :class:`ServeConfig`): a failing batch is
+bisected so a poisoned request fails alone; consecutive whole-batch
+failures trip the admission circuit breaker (queued requests shed fast
+until a half-open probe succeeds); and a watchdog thread restarts the
+batcher — on a fresh epoch, over the last good serving generation — when
+it dies or its heartbeat goes stale (wedged device call).  An abandoned
+batcher that later wakes finishes its in-flight batch and exits on the
+epoch mismatch; the installer's install lock covers the brief overlap.
 """
 from __future__ import annotations
 
@@ -26,8 +35,9 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.resilience import InjectedCrash, fault_point
 from repro.serve.admission import AdmissionController, LatencyModel
-from repro.serve.batcher import fail_timeouts, resolve_batch
+from repro.serve.batcher import fail_timeouts, resolve_batch_safe
 from repro.serve.config import ServeConfig
 from repro.serve.metrics import Metrics
 from repro.serve.queue import RequestQueue
@@ -53,8 +63,15 @@ class Server:
         # re-verify any response against the exact snapshot that served it
         self.history: deque = deque(maxlen=8)
         self.warmup_info: dict | None = None
+        self._dim = getattr(index, "dim", None)   # submit() shape validation
         self._thread: threading.Thread | None = None
         self._running = threading.Event()
+        # -- self-healing state ---------------------------------------------
+        self._epoch = 0                 # bumped per batcher (re)spawn; an
+                                        # abandoned thread exits on mismatch
+        self._heartbeat = time.perf_counter()
+        self._watchdog: threading.Thread | None = None
+        self._stop_watchdog = threading.Event()
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "Server":
@@ -75,9 +92,13 @@ class Server:
              - (info["total_s"] - info["first_response_s"])) * 1e3)
         self.warmup_info = info
         self._running.set()
-        self._thread = threading.Thread(target=self._serve_loop, daemon=True,
-                                        name="serve-batcher")
-        self._thread.start()
+        self._spawn_batcher()
+        if self.cfg.watchdog:
+            self._stop_watchdog.clear()
+            self._watchdog = threading.Thread(target=self._watchdog_loop,
+                                              daemon=True,
+                                              name="serve-watchdog")
+            self._watchdog.start()
         if self._mutable is not None:
             self.watcher = SnapshotWatcher(self._mutable,
                                            self.installer.publish,
@@ -90,6 +111,10 @@ class Server:
         if self.watcher is not None:
             self.watcher.stop()
             self.watcher = None
+        self._stop_watchdog.set()
+        if self._watchdog is not None:
+            self._watchdog.join(timeout=5)
+            self._watchdog = None
         self._running.clear()
         self.queue.close()
         if self._thread is not None:
@@ -124,7 +149,16 @@ class Server:
         if storage not in cfg.storages:
             raise ValueError(f"storage {storage!r} not served "
                              f"(configured: {cfg.storages})")
-        req = Request(query=np.asarray(query, np.float32).reshape(-1),
+        try:
+            q = np.asarray(query, np.float32).reshape(-1)
+        except (TypeError, ValueError) as e:
+            raise ValueError(f"query is not a float vector: {e}") from None
+        if self._dim is not None and q.shape[0] != self._dim:
+            raise ValueError(f"query has dim {q.shape[0]}, "
+                             f"index expects {self._dim}")
+        if not np.all(np.isfinite(q)):
+            raise ValueError("query contains NaN/Inf values")
+        req = Request(query=q,
                       k=k, ef=cfg.ef_buckets[0] if ef is None else ef,
                       expand=cfg.expand if expand is None else expand,
                       storage=storage,
@@ -138,12 +172,25 @@ class Server:
     def _record(self, fut: Future) -> None:
         if fut.exception() is None:
             self.metrics.record(fut.result())
+        else:
+            self.metrics.record_error(fut.exception())
 
     # -- batcher thread ------------------------------------------------------
-    def _serve_loop(self) -> None:
+    def _spawn_batcher(self) -> None:
+        self._epoch += 1
+        self._heartbeat = time.perf_counter()
+        self._thread = threading.Thread(target=self._serve_loop,
+                                        args=(self._epoch,), daemon=True,
+                                        name=f"serve-batcher-{self._epoch}")
+        self._thread.start()
+
+    def _serve_loop(self, epoch: int) -> None:
         cfg = self.cfg
+        breaker = self.admission.breaker
         group_of = lambda r: r.group(cfg)
-        while self._running.is_set():
+        while self._running.is_set() and epoch == self._epoch:
+            self._heartbeat = time.perf_counter()
+            fault_point("serve.loop", epoch=epoch)
             if self.installer.maybe_install() is not None:
                 snap = self.installer.serving
                 self.history.append((snap.generation, snap))
@@ -152,15 +199,49 @@ class Server:
                                           linger=cfg.max_wait_ms / 1e3)
             if not batch:
                 continue
+            if not breaker.allow():
+                # open breaker: shed without any device work — failing fast
+                # beats burning every request's deadline on a broken backend
+                now = time.perf_counter()
+                for r in batch:
+                    if not r.future.done():
+                        r.future.set_result(Response(
+                            id=r.id, status="shed",
+                            queue_ms=r.elapsed_ms(now),
+                            total_ms=r.elapsed_ms(now)))
+                self.metrics.record_event("breaker_shed", len(batch))
+                continue
             serve, timed_out, ef, degraded = self.admission.plan(
                 batch, len(self.queue))
             fail_timeouts(timed_out)
             if not serve:
                 continue
             try:
-                resolve_batch(self.installer.serving, cfg, serve, ef,
-                              degraded, self.model)
-            except Exception as e:        # fail the batch, keep serving
-                for r in serve:
-                    if not r.future.done():
+                n_ok, _ = resolve_batch_safe(
+                    self.installer.serving, cfg, serve, ef, degraded,
+                    model=self.model, bisect=cfg.bisect_retry)
+            except InjectedCrash as e:     # simulated process death: resolve
+                for r in serve:            # in-flight futures, then die (the
+                    if not r.future.done():  # watchdog restarts the loop)
                         r.future.set_exception(e)
+                raise
+            if breaker.record(n_ok > 0):
+                self.metrics.record_event("breaker_trip")
+
+    # -- watchdog thread -----------------------------------------------------
+    def _watchdog_loop(self) -> None:
+        cfg = self.cfg
+        while not self._stop_watchdog.wait(cfg.watchdog_poll_s):
+            if not self._running.is_set():
+                continue
+            t, stale = self._thread, (time.perf_counter() - self._heartbeat)
+            if t is None:
+                continue
+            if not t.is_alive():
+                self.metrics.record_event("watchdog_restart_dead")
+                self._spawn_batcher()
+            elif stale > cfg.watchdog_stall_s:
+                # wedged mid-batch: abandon it (it exits on epoch mismatch
+                # when it wakes) and serve from the last good generation
+                self.metrics.record_event("watchdog_restart_stalled")
+                self._spawn_batcher()

@@ -16,10 +16,19 @@ installs the pending snapshot *between* batches via
 
 The retired generation's device arrays are dropped right after the install —
 with donation they were consumed by the splice anyway.
+
+An install that fails partway (device upload error mid-splice) is rolled
+back: the half-written caches are reset and the *previous* serving snapshot
+is re-uploaded in full — donation means its old device buffers may already
+be dead, so a cheap "keep serving the old arrays" is not available.  Serving
+continues on the previous generation; the failed snapshot is dropped (the
+watcher re-publishes on the next generation bump).
 """
 from __future__ import annotations
 
 import threading
+
+from repro.resilience import InjectedCrash, fault_point
 
 
 class SnapshotWatcher:
@@ -83,7 +92,9 @@ class GenerationInstaller:
         self.metrics = metrics
         self._pending = None
         self._lock = threading.Lock()
+        self._install_lock = threading.Lock()   # watchdog restart overlap
         self.serving = None
+        self.rollbacks = 0
 
     def prewarm(self, max_updates: int | None = None) -> int:
         """Compile every scatter-splice program delta installs can hit, so a
@@ -95,15 +106,43 @@ class GenerationInstaller:
             self._pending = snapshot
 
     def install(self, snapshot):
-        """Upload/splice ``snapshot`` and make it the serving generation."""
-        stats = [c.install(snapshot) for c in self.caches.values()]
-        old, self.serving = self.serving, snapshot
-        if old is not None and old is not snapshot:
-            old.drop_device()    # donated buffers are dead; searchers stale
+        """Upload/splice ``snapshot`` and make it the serving generation.
+
+        Returns the per-cache :class:`UploadStats` list, or ``None`` when the
+        install failed and was rolled back to the previous generation."""
+        with self._install_lock:
+            prev = self.serving
+            try:
+                fault_point("serve.swap.install",
+                            generation=snapshot.generation)
+                stats = [c.install(snapshot) for c in self.caches.values()]
+            except InjectedCrash:
+                raise
+            except Exception:
+                self._rollback(snapshot, prev)
+                return None
+            self.serving = snapshot
+            if prev is not None and prev is not snapshot:
+                prev.drop_device()  # donated buffers are dead; searchers stale
+            if self.metrics is not None:
+                for s in stats:
+                    self.metrics.record_swap(s)
+            return stats
+
+    def _rollback(self, failed, prev) -> None:
+        """Re-upload ``prev`` in full after a half-finished install of
+        ``failed``: a partial splice may have consumed the donated resident
+        buffers, so every cache restarts from clean host arrays."""
+        self.rollbacks += 1
+        failed.drop_device()
+        for c in self.caches.values():
+            c.reset()
+        if prev is not None:
+            prev.drop_device()          # seeded refs point at dead buffers
+            for c in self.caches.values():
+                c.install(prev)
         if self.metrics is not None:
-            for s in stats:
-                self.metrics.record_swap(s)
-        return stats
+            self.metrics.record_event("swap_rollback")
 
     def maybe_install(self):
         """Install the pending snapshot if there is one (batcher thread)."""

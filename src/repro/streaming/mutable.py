@@ -113,6 +113,7 @@ class MutableIndex:
         self._wal: list[tuple[str, np.ndarray]] = []   # ops since save_delta
         self._delta_seq = 0           # next delta segment number on disk
         self._delta_path = None       # directory the delta log is bound to
+        self.recovery_report = None   # set by load(recover=True)
         # serving-tier hooks: mutations and freeze() are serialized by this
         # reentrant lock (a snapshot watcher may freeze from another thread
         # while a writer appends), and every generation bump notifies the
@@ -151,6 +152,10 @@ class MutableIndex:
     @property
     def n_alive(self) -> int:
         return int((~self._dead[: self._n]).sum())
+
+    @property
+    def dim(self) -> int:
+        return self.base.dim
 
     @property
     def capacity(self) -> int:
@@ -485,11 +490,25 @@ class MutableIndex:
         return delta.replay(self, path)
 
     @classmethod
-    def load(cls, path: str | Path, **kw) -> "MutableIndex":
+    def load(cls, path: str | Path, recover: bool = False,
+             **kw) -> "MutableIndex":
         """v2 base + v3 delta log -> the exact mutated index (bit-identical
-        arrays, hence bit-identical search results)."""
+        arrays, hence bit-identical search results).
+
+        Default is strict: a corrupted or gapped delta log raises
+        :class:`~repro.resilience.CorruptArtifactError` — nothing corrupt is
+        ever replayed.  With ``recover=True`` the log is healed first
+        (:func:`repro.streaming.delta.recover`): the first bad segment and
+        the whole suffix behind it are quarantined, the surviving good prefix
+        replays bit-deterministically, and the recovery report is attached as
+        ``mi.recovery_report``.
+        """
+        from repro.streaming import delta
+
+        report = delta.recover(path) if recover else None
         mi = cls(Index.load(path), **kw)
         mi.replay(path)
+        mi.recovery_report = report
         return mi
 
     def _apply(self, kind: str, arr: np.ndarray):

@@ -1,0 +1,368 @@
+"""Fault injection + crash-safe durability + self-healing serving.
+
+Durability invariants under injected faults:
+
+  * every crash window of ``ft.checkpoint.save`` leaves a recoverable
+    checkpoint (the last durable state is never deleted before its
+    replacement is fully on disk);
+  * every corruption — torn npz, flipped bit, WAL gap, lost manifest — is
+    *detected* (``CorruptArtifactError`` / quarantine), never loaded
+    silently;
+  * WAL recovery quarantines the corrupted suffix (nothing deleted) and the
+    surviving prefix replays bit-identically.
+
+Serving invariants: a poisoned request in a batch of 32 fails exactly one
+future (bisection), the circuit breaker trips only on whole-batch failures,
+and a failed generation install rolls back to the previous serving snapshot.
+"""
+import json
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.ft import checkpoint as ckpt
+from repro.index import CorruptArtifactError, Index
+from repro.resilience import (FaultPlan, FaultSpec, InjectedCrash,
+                              InjectedFault, active_plan, checksum_array,
+                              fault_point, verify_arrays)
+from repro.serve import CircuitBreaker, Metrics, ServeConfig, Server
+from repro.serve.batcher import resolve_batch_safe
+from repro.serve.request import Request
+from repro.serve.swap import GenerationInstaller
+from repro.streaming import MutableIndex, delta
+
+
+# ---------------------------------------------------------------------------
+# fault plan mechanics
+# ---------------------------------------------------------------------------
+def test_fault_plan_deterministic_replay():
+    def run():
+        plan = FaultPlan({
+            "p.raise": FaultSpec("raise", at=(1, 3)),
+            "p.window": FaultSpec("raise", after=2, until=4),
+            "p.prob": FaultSpec("raise", p=0.5, max_fires=2),
+        }, seed=42)
+        fired = []
+        with active_plan(plan):
+            for point in ("p.raise", "p.window", "p.prob"):
+                for i in range(8):
+                    try:
+                        fault_point(point)
+                        fired.append((point, i, False))
+                    except InjectedFault:
+                        fired.append((point, i, True))
+        return fired, [(e.point, e.hit, e.kind) for e in plan.events]
+
+    f1, log1 = run()
+    f2, log2 = run()
+    assert f1 == f2 and log1 == log2          # same seed -> same schedule
+    assert [i for p, i, hit in f1 if p == "p.raise" and hit] == [1, 3]
+    assert [i for p, i, hit in f1 if p == "p.window" and hit] == [2, 3]
+    assert sum(1 for p, _, hit in f1 if p == "p.prob" and hit) == 2
+
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("explode")
+
+
+def test_fault_point_free_without_plan():
+    fault_point("nonexistent.point", ids=[1, 2])   # no plan -> pure no-op
+
+
+# ---------------------------------------------------------------------------
+# checkpoint crash windows + verification
+# ---------------------------------------------------------------------------
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((16, 8)).astype(np.float32),
+            "step_id": np.asarray([seed], np.int64)}
+
+
+@pytest.mark.parametrize("window", ["ckpt.write_arrays", "ckpt.pre_swap",
+                                    "ckpt.mid_swap", "ckpt.post_swap"])
+def test_checkpoint_survives_every_crash_window(tmp_path, window):
+    d = tmp_path / "ck" / "step_0"
+    ckpt.save(d, step=0, tree=_tree(0))
+    kind = "torn_write" if window == "ckpt.write_arrays" else "crash"
+    with active_plan(FaultPlan({window: FaultSpec(kind, at=(0,))})):
+        with pytest.raises(InjectedCrash):
+            ckpt.save(d, step=0, tree=_tree(1))
+    # whatever window died, a complete checkpoint is recoverable
+    assert ckpt.steps(tmp_path / "ck") == [0]
+    tree, manifest = ckpt.restore(d, {k: 0 for k in _tree(0)})
+    expect = _tree(0) if window in ("ckpt.write_arrays", "ckpt.pre_swap",
+                                    "ckpt.mid_swap") else _tree(1)
+    assert int(tree["step_id"][0]) == int(expect["step_id"][0])
+    np.testing.assert_array_equal(np.asarray(tree["w"]), expect["w"])
+    assert manifest["checksums"]["arrays"].keys() == {"w", "step_id"}
+
+
+def test_checkpoint_detects_bit_flip_on_read(tmp_path):
+    d = tmp_path / "step_0"
+    ckpt.save(d, step=0, tree=_tree(0))
+    plan = FaultPlan({"ckpt.read_arrays": FaultSpec("bit_flip", at=(0,))})
+    with active_plan(plan):
+        with pytest.raises(CorruptArtifactError, match="checksum mismatch"):
+            ckpt.restore(d, {k: 0 for k in _tree(0)})
+    assert plan.events_of("bit_flip")          # the flip actually fired
+
+
+def test_checksum_helpers():
+    a = np.arange(12, dtype=np.float32)
+    cks = {"algo": None, "arrays": {}}
+    from repro.resilience import ALGO
+    cks["algo"], cks["arrays"]["a"] = ALGO, checksum_array(a, ALGO)
+    verify_arrays({"a": a}, cks, "here")                 # clean
+    verify_arrays({"a": a}, None, "here")                # pre-checksum artifact
+    b = a.copy()
+    b[3] += 1
+    with pytest.raises(CorruptArtifactError, match="'a'"):
+        verify_arrays({"a": b}, cks, "here")
+
+
+# ---------------------------------------------------------------------------
+# index artifact integrity
+# ---------------------------------------------------------------------------
+def test_index_torn_npz_detected(tmp_path, unit_index):
+    d = tmp_path / "idx"
+    unit_index.save(d)
+    meta = json.loads((d / "spec.json").read_text())
+    assert "checksums" in meta                 # format v2 now records them
+    with open(d / "arrays.npz", "r+b") as f:
+        f.truncate((d / "arrays.npz").stat().st_size // 2)
+    with pytest.raises(CorruptArtifactError, match="arrays.npz"):
+        Index.load(d)
+
+
+def test_index_bit_flip_on_read_detected(tmp_path, unit_index):
+    d = tmp_path / "idx"
+    unit_index.save(d)
+    loaded = Index.load(d)                     # clean load passes checksums
+    assert loaded.n == unit_index.n
+    with active_plan(FaultPlan({"index.read_arrays":
+                                FaultSpec("bit_flip", at=(2,))})):
+        with pytest.raises(CorruptArtifactError, match="checksum mismatch"):
+            Index.load(d)
+
+
+# ---------------------------------------------------------------------------
+# WAL recovery: quarantine + bit-deterministic prefix replay
+# ---------------------------------------------------------------------------
+def _wal(tmp_path, unit_index, n_segments=3, rows=4, seed=0):
+    rng = np.random.default_rng(seed)
+    mi = MutableIndex(unit_index, reserve=0.5)
+    wal = tmp_path / "wal"
+    for _ in range(n_segments):
+        mi.append(rng.standard_normal((rows, unit_index.dim))
+                  .astype(np.float32))
+        mi.save_delta(wal)
+    return wal, mi
+
+
+def test_wal_byte_flip_quarantined_prefix_bit_identical(tmp_path, unit_index):
+    wal, mi = _wal(tmp_path, unit_index)
+    npz = wal / "delta" / "step_1" / "arrays.npz"
+    data = bytearray(npz.read_bytes())
+    data[len(data) // 2] ^= 0x04
+    npz.write_bytes(bytes(data))
+
+    with pytest.raises(CorruptArtifactError):  # strict: refuse, don't guess
+        MutableIndex.load(wal)
+
+    m1 = MutableIndex.load(wal, recover=True)
+    rep = m1.recovery_report
+    assert rep["good"] == [0] and rep["quarantined"] == [1, 2]
+    # nothing deleted: the corrupt bytes are kept for forensics
+    q = wal / "delta" / "quarantine"
+    assert (q / "step_1").exists() and (q / "step_2").exists()
+    # the surviving prefix holds exactly segment 0's acked appends
+    assert m1.n == unit_index.n + 4
+
+    m2 = MutableIndex.load(wal)                # now-clean log, strict load
+    s1, s2 = m1.freeze(), m2.freeze()
+    assert m1.n == m2.n
+    np.testing.assert_array_equal(s1.db_packed[:m1.n], s2.db_packed[:m2.n])
+    np.testing.assert_array_equal(s1.graph.base_adjacency[:m1.n],
+                                  s2.graph.base_adjacency[:m2.n])
+
+
+def test_wal_gap_detected_and_quarantined(tmp_path, unit_index):
+    wal, _ = _wal(tmp_path, unit_index)
+    shutil.rmtree(wal / "delta" / "step_1")
+    with pytest.raises(CorruptArtifactError, match="gap"):
+        MutableIndex.load(wal)
+    rep = delta.recover(wal)
+    assert rep["good"] == [0] and rep["quarantined"] == [2]
+    assert MutableIndex.load(wal).n == unit_index.n + 4
+
+
+def test_wal_lost_manifest_detected(tmp_path, unit_index):
+    wal, _ = _wal(tmp_path, unit_index)
+    (wal / "delta" / "step_2" / "manifest.json").unlink()
+    # an atomic completed save never leaves a manifest-less segment: this is
+    # corruption, not an incomplete write -- silently dropping it would lose
+    # acked ops
+    with pytest.raises(CorruptArtifactError, match="step_2"):
+        MutableIndex.load(wal)
+    rep = delta.recover(wal)
+    assert rep["good"] == [0, 1] and rep["quarantined"] == [2]
+
+
+def test_wal_torn_flush_loses_only_unacked(tmp_path, unit_index):
+    wal, mi = _wal(tmp_path, unit_index, n_segments=2)
+    mi.append(np.zeros((4, unit_index.dim), np.float32))
+    with active_plan(FaultPlan({"ckpt.write_arrays":
+                                FaultSpec("torn_write", at=(0,))})):
+        with pytest.raises(InjectedCrash):
+            mi.save_delta(wal)                 # the flush the process died in
+    m = MutableIndex.load(wal, recover=True)
+    assert m.recovery_report["reason"] is None
+    assert m.n == unit_index.n + 8             # both acked segments survive
+
+
+# ---------------------------------------------------------------------------
+# serving: submit validation, bisection, breaker, rollback
+# ---------------------------------------------------------------------------
+def test_submit_validates_query(unit_index):
+    srv = Server(unit_index, ServeConfig(ef_buckets=(16, 32), k_max=8))
+    dim = unit_index.dim
+    with pytest.raises(ValueError, match="dim"):
+        srv.submit(np.zeros(dim + 1, np.float32))
+    with pytest.raises(ValueError, match="NaN"):
+        srv.submit(np.full(dim, np.nan, np.float32))
+    with pytest.raises(ValueError, match="NaN"):
+        srv.submit(np.r_[np.zeros(dim - 1, np.float32), np.inf])
+    with pytest.raises(ValueError, match="float vector"):
+        srv.submit(["not", "a", "vector"])
+    f = srv.submit(np.zeros(dim, np.float32))  # valid, server not started
+    assert f.result().status == "shed"
+
+
+def test_bisection_isolates_one_poisoned_request(unit_db, unit_index):
+    cfg = ServeConfig(ef_buckets=(16, 32), batch_buckets=(1, 4, 8, 32),
+                      k_max=8)
+    serve = [Request(query=np.asarray(unit_db.vectors[i], np.float32),
+                     k=5, ef=16, expand=cfg.expand, storage="f32",
+                     deadline_ms=60_000.0) for i in range(32)]
+    metrics = Metrics(slo_ms=60_000.0)
+    plan = FaultPlan({"serve.batch_exec": FaultSpec("poison", at=(0,))},
+                     seed=11)
+    with active_plan(plan):
+        n_ok, n_failed = resolve_batch_safe(unit_index, cfg, serve, 16,
+                                            False, metrics=metrics)
+    assert (n_ok, n_failed) == (31, 1)         # the acceptance bound: 1 of 32
+    excs = [r.future.exception() for r in serve]
+    assert sum(e is not None for e in excs) == 1
+    (bad,) = [r for r, e in zip(serve, excs) if e is not None]
+    assert str(bad.id) in str(bad.future.exception())
+    ok = [r.future.result() for r in serve if r.future.exception() is None]
+    assert all(r.status == "ok" for r in ok)
+    assert metrics.summary()["errors"] == 1
+    # the poison was consumed at the batch-of-one: a clean retry succeeds
+    with active_plan(plan):
+        n_ok, n_failed = resolve_batch_safe(
+            unit_index, cfg,
+            [Request(query=np.asarray(unit_db.vectors[0], np.float32), k=5,
+                     ef=16, expand=cfg.expand, storage="f32",
+                     deadline_ms=60_000.0)], 16, False)
+    assert (n_ok, n_failed) == (1, 0)
+
+
+def test_injected_crash_is_never_healed(unit_db, unit_index):
+    cfg = ServeConfig(ef_buckets=(16, 32), batch_buckets=(1, 4), k_max=8)
+    serve = [Request(query=np.asarray(unit_db.vectors[i], np.float32),
+                     k=5, ef=16, expand=cfg.expand, storage="f32",
+                     deadline_ms=60_000.0) for i in range(4)]
+    with active_plan(FaultPlan({"serve.batch_exec":
+                                FaultSpec("crash", at=(0,))})):
+        with pytest.raises(InjectedCrash):     # propagates, no bisection
+            resolve_batch_safe(unit_index, cfg, serve, 16, False)
+
+
+def test_circuit_breaker_state_machine():
+    b = CircuitBreaker(threshold=3, cooldown_s=10.0)
+    t = 1000.0
+    assert b.allow(t)
+    assert not b.record(False, t) and not b.record(False, t)
+    assert b.record(True, t) is False and b.failures == 0   # success resets
+    for i in range(2):
+        assert b.record(False, t) is False
+    assert b.record(False, t) is True          # third consecutive: trips
+    assert b.state == "open" and b.trips == 1
+    assert not b.allow(t + 9.9)                # still cooling down
+    assert b.allow(t + 10.1)                   # half-open: one probe
+    assert b.state == "half_open" and not b.allow(t + 10.2)
+    assert b.record(False, t + 10.3) is True   # probe failed: re-open
+    assert not b.allow(t + 10.4)
+    assert b.allow(t + 20.4)                   # next probe
+    b.record(True, t + 20.5)
+    assert b.state == "closed" and b.allow(t + 20.6)
+
+
+def test_metrics_errors_and_events():
+    m = Metrics(slo_ms=50.0)
+    m.record_error(RuntimeError("x"))
+    m.record_event("breaker_trip")
+    m.record_event("breaker_shed", 7)
+    s = m.summary()
+    assert s["errors"] == 1
+    assert s["events"] == {"breaker_trip": 1, "breaker_shed": 7}
+    assert "events" not in Metrics(slo_ms=50.0).summary()   # only when any
+
+
+def test_swap_install_failure_rolls_back(unit_index):
+    cfg = ServeConfig(ef_buckets=(16, 32), k_max=8)
+    mi = MutableIndex(unit_index, reserve=0.5)
+    inst = GenerationInstaller(cfg)
+    s0 = mi.freeze()
+    assert inst.install(s0) is not None and inst.serving is s0
+
+    mi.append(np.zeros((4, unit_index.dim), np.float32))
+    s1 = mi.freeze()
+    with active_plan(FaultPlan({"serve.swap.install":
+                                FaultSpec("raise", at=(0,))})):
+        assert inst.install(s1) is None        # failed install: rolled back
+    assert inst.serving is s0 and inst.rollbacks == 1
+    # the rolled-back generation still serves (re-uploaded after reset)
+    res = s0.search(np.zeros((1, unit_index.dim), np.float32))
+    assert res.ids.shape[1] >= 1
+
+    stats = inst.install(s1)                   # retry without faults: lands
+    assert stats is not None and inst.serving is s1
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_watchdog_restarts_dead_and_stalled_batcher(unit_db, unit_index):
+    # the injected serve.loop crash kills that batcher thread by design;
+    # the watchdog restarting it is exactly what this test asserts
+    cfg = ServeConfig(ef_buckets=(16,), batch_buckets=(1, 4), k_max=8,
+                      watchdog_poll_s=0.05, watchdog_stall_s=0.3)
+    q = np.asarray(unit_db.vectors[0], np.float32)
+    with Server(unit_index, cfg) as srv:
+        assert srv.submit(q, deadline_ms=10_000).result(timeout=30) \
+            .status == "ok"
+        e0 = srv._epoch
+        with active_plan(FaultPlan({"serve.loop":
+                                    FaultSpec("crash", at=(1,))})):
+            import time
+            deadline = time.time() + 5
+            while srv._epoch == e0 and time.time() < deadline:
+                time.sleep(0.05)
+        assert srv._epoch > e0                 # dead batcher respawned
+        assert srv.submit(q, deadline_ms=10_000).result(timeout=30) \
+            .status == "ok"
+        e1 = srv._epoch
+        with active_plan(FaultPlan({"serve.batch_exec":
+                                    FaultSpec("delay", at=(0,),
+                                              delay_s=1.0)})):
+            f = srv.submit(q, deadline_ms=10_000)
+            import time
+            deadline = time.time() + 5
+            while srv._epoch == e1 and time.time() < deadline:
+                time.sleep(0.05)
+            assert f.result(timeout=30).status == "ok"   # wedged batch still
+        assert srv._epoch > e1                 # ...resolves; thread replaced
+        ev = srv.metrics.summary()["events"]
+        assert ev.get("watchdog_restart_dead", 0) >= 1
+        assert ev.get("watchdog_restart_stalled", 0) >= 1
