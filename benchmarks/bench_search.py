@@ -13,7 +13,10 @@ cancels slow drift that would otherwise bias whichever config ran second.
 
 Besides the local-CPU A/B pair the JSON carries one row per execution
 substrate: ``packed_storage`` (the multi-expansion point scored straight from
-the Dfloat bitstream), ``sharded`` (the owner-sharded shard_map backend, with
+the Dfloat bitstream), ``tiered_storage`` (coarse tier resident, residual
+fetched only for non-exited lanes — resident bytes/vector, survivor-fetch
+fraction, total bytes/query vs packed, and equal-recall QPS), ``sharded``
+(the owner-sharded shard_map backend, with
 its per-hop collective payload and overhead vs local), ``sharded_scaling``
 (an n_shards in {1, 4, 8} sub-table measured in a subprocess under
 ``--xla_force_host_platform_device_count=8``; this box executes fake devices
@@ -168,7 +171,8 @@ def _scaling_worker(dataset: str, storage: str) -> dict:
             else IndexSpec.for_db(db, m=16, dfloat_recall_target=0.9,
                                   dfloat_proxy=True))
     idx = Index.build(db, spec, cache_key=dataset)
-    use_dfloat = spec.dfloat_recall_target is not None or storage == "packed"
+    use_dfloat = (spec.dfloat_recall_target is not None
+                  or storage in ("packed", "tiered"))
     q = db.queries[: min(N_QUERIES, len(db.queries))]
     p = SearchParams(expand=DEFAULT_EXPAND, ef=TINY_EF if tiny else MULTI_EF,
                      k=10, use_fee=True, use_dfloat=use_dfloat,
@@ -242,6 +246,51 @@ def _ndpsim_row(idx, db, params: SearchParams, q) -> dict:
         dram_bytes_per_query=round(sim.dram_bytes_per_query, 1),
         energy_uj_per_query=round(sim.energy_uj_per_query, 3),
         prefetch_hit=round(sim.prefetch_hit, 3),
+    )
+
+
+def _tiered_row(idx, db, params: SearchParams, q, packed_qps: float) -> dict:
+    """The tiered operating point plus its byte accounting vs packed.
+
+    Bytes/query follow the gather model both storages share: every evaluated
+    lane streams its resident row (full packed row vs coarse tier), and only
+    lanes whose FEE sequence survived past the coarse tier fetch the residual
+    words — so tiered lands strictly below packed whenever any lane exits
+    early.  The survivor-fetch fraction comes from the traced run's
+    ``n_resid``/``n_eval`` counters; ndpsim's independently derived
+    ``survivor_fetch_fraction`` (its far-memory channel model) rides along
+    for cross-checking.
+    """
+    p_tiered = dataclasses.replace(params, storage="tiered", use_dfloat=True)
+    run = idx.searcher("local", p_tiered)
+    qps = _min_qps(run, q)
+    out = run(q)
+    tr = idx.searcher("local", dataclasses.replace(p_tiered, trace=True))(q)
+    ccfg, rcfg = idx.tier_cfgs()
+    cb, rb = ccfg.packed_row_bytes(), rcfg.packed_row_bytes()
+    pb = idx.dfloat_cfg.packed_row_bytes()
+    n_eval = float(tr.n_eval.sum())
+    n_resid = float(tr.n_resid.sum())
+    frac = n_resid / max(n_eval, 1.0)
+    bytes_q = (n_eval * cb + n_resid * rb) / len(q)
+    bytes_q_packed = n_eval * pb / len(q)
+    sim = idx.searcher("ndpsim", p_tiered)(q[:N_NDP_QUERIES]).sim
+    return dict(
+        ef=params.ef, expand=params.expand, storage="tiered",
+        tier_split=idx.tier_split,
+        qps=round(qps, 1),
+        qps_vs_packed=round(qps / max(packed_qps, 1e-9), 3),
+        recall_at_10=round(float(recall_at_k(out.ids, db.gt[: len(q)], 10)), 4),
+        resident_bytes_per_vector=cb,
+        residual_bytes_per_vector=rb,
+        packed_bytes_per_vector=pb,
+        residual_fetch_fraction=round(frac, 4),
+        bytes_per_query=round(bytes_q, 1),
+        packed_bytes_per_query=round(bytes_q_packed, 1),
+        bytes_vs_packed=round(bytes_q / max(bytes_q_packed, 1e-9), 4),
+        ndpsim_survivor_fetch_fraction=round(
+            sim.survivor_fetch_fraction or 0.0, 4),
+        ndpsim_far_bytes_per_query=round(sim.far_bytes_per_query, 1),
     )
 
 
@@ -373,9 +422,10 @@ def run_json(out_path: str | Path = "BENCH_search.json",
             else IndexSpec.for_db(db, m=16, dfloat_recall_target=0.9,
                                   dfloat_proxy=True))
     idx = Index.build(db, spec, cache_key=dataset)
-    # packed storage scores the bitstream — the Dfloat (possibly fp32-layout)
-    # quantized view — so it implies use_dfloat
-    use_dfloat = spec.dfloat_recall_target is not None or storage == "packed"
+    # packed/tiered storage scores the bitstream — the Dfloat (possibly
+    # fp32-layout) quantized view — so both imply use_dfloat
+    use_dfloat = (spec.dfloat_recall_target is not None
+                  or storage in ("packed", "tiered"))
     n_queries = min(N_QUERIES, len(db.queries))
     q = db.queries[:n_queries]
 
@@ -397,6 +447,9 @@ def run_json(out_path: str | Path = "BENCH_search.json",
     base = _stats(idx, db, p_base, q, n_queries / best[0])
     multi = _stats(idx, db, p_multi, q, n_queries / best[1])
     p_packed = dataclasses.replace(p_multi, storage="packed", use_dfloat=True)
+    packed_row = (multi if storage == "packed" else
+                  _stats(idx, db, p_packed, q,
+                         _min_qps(idx.searcher("local", p_packed), q)))
 
     result = dict(
         bench="fig15_qps_search",
@@ -419,9 +472,8 @@ def run_json(out_path: str | Path = "BENCH_search.json",
         recall_delta=round(multi["recall_at_10"] - base["recall_at_10"], 4),
         # one row per execution substrate (same multi-expansion point); when
         # the A/B pair already ran packed, reuse it instead of re-measuring
-        packed_storage=(multi if storage == "packed" else
-                        _stats(idx, db, p_packed, q,
-                               _min_qps(idx.searcher("local", p_packed), q))),
+        packed_storage=packed_row,
+        tiered_storage=_tiered_row(idx, db, p_multi, q, packed_row["qps"]),
         sharded=_sharded_row(idx, db, p_multi, q, local_qps=multi["qps"]),
         sharded_scaling=_scaling_table(dataset, storage),
         ndpsim=_ndpsim_row(idx, db, p_multi, q),
@@ -438,6 +490,9 @@ def run_json(out_path: str | Path = "BENCH_search.json",
           f"{multi['hops_per_query']} ({result['hops_reduction']}x), "
           f"recall {base['recall_at_10']} -> {multi['recall_at_10']}; "
           f"packed qps {result['packed_storage']['qps']}, "
+          f"tiered qps {result['tiered_storage']['qps']} "
+          f"({result['tiered_storage']['bytes_vs_packed']}x bytes, "
+          f"rf={result['tiered_storage']['residual_fetch_fraction']}), "
           f"sharded qps {result['sharded']['qps']} "
           f"({result['sharded'].get('overhead_vs_local', '?')}x local), "
           f"ndpsim qps {result['ndpsim']['qps']}, "
@@ -484,7 +539,8 @@ if __name__ == "__main__":
     ap.add_argument("--churn", action="store_true",
                     help="add the streaming-mutation smoke row")
     ap.add_argument("--dataset", default=None)
-    ap.add_argument("--storage", default=None, choices=[None, "f32", "packed"])
+    ap.add_argument("--storage", default=None,
+                    choices=[None, "f32", "packed", "tiered"])
     ap.add_argument("--out", default="BENCH_search.json")
     ap.add_argument("--scaling-worker", action="store_true",
                     help="internal: emit the multi-shard scaling table as "

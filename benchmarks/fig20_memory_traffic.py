@@ -97,15 +97,34 @@ def main(csv):
                         tree_b += tree_merge_bytes(
                             np.bincount(owner[lanes], minlength=n_ch), 64)
             n_q = acc.shape[0]
+            # varint decoder occupancy: the byte savings above are only free
+            # if the serial id decoder keeps up with the line stream — price
+            # both codings in decoder-ns per query next to their DRAM-ns
+            # (ndpsim charges the same constants on its critical path)
+            n_ids_vdz = (adj[exp_vdz] >= 0).sum() / n_q       # ids decoded/q
+            n_ids_plain = (adj[exp_plain] >= 0).sum() / n_q
+            dec_varint_ns = (n_ids_vdz * NASZIP_2CH.varint_decode_cycles_per_id
+                             / NASZIP_2CH.vpe_freq_ghz)
+            dec_dense_ns = n_ids_plain / NASZIP_2CH.vpe_freq_ghz
+            stream_varint_ns = vdzip_list_pq / NASZIP_2CH.subch_bw_gbps
+            stream_dense_ns = hnsw_list_pq / NASZIP_2CH.subch_bw_gbps
+            occ_varint = dec_varint_ns / max(stream_varint_ns, 1e-9)
+            occ_dense = dec_dense_ns / max(stream_dense_ns, 1e-9)
             print(f"{name:9s} hnsw=1.00  pq={pq_bytes/base:.2f} (m={n_sub}, "
                   f"rec={pq_rec:.2f})  rabitq~={rbq_bytes/base:.2f}  "
                   f"vdzip={vdzip_bytes/base:.2f} (recall={rec:.3f})")
             print(f"{'':9s} merge/query: flat={flat_b/n_q:.0f}B "
                   f"tree={tree_b/n_q:.0f}B "
                   f"(tree/flat={tree_b/max(flat_b, 1):.2f})")
+            print(f"{'':9s} list decoder: varint={dec_varint_ns:.0f}ns/q "
+                  f"(occ={occ_varint:.2f}x stream)  "
+                  f"dense={dec_dense_ns:.0f}ns/q (occ={occ_dense:.2f}x)")
             return dict(pq=round(pq_bytes / base, 2),
                         rabitq=round(rbq_bytes / base, 2),
                         vdzip=round(vdzip_bytes / base, 2),
                         merge_flat_bytes_per_query=round(flat_b / n_q, 1),
-                        merge_tree_bytes_per_query=round(tree_b / n_q, 1))
+                        merge_tree_bytes_per_query=round(tree_b / n_q, 1),
+                        varint_decode_ns_per_query=round(dec_varint_ns, 1),
+                        varint_decode_occupancy=round(occ_varint, 3),
+                        dense_decode_occupancy=round(occ_dense, 3))
         csv.timed(f"fig20_{name}", run)

@@ -102,6 +102,45 @@ def fp32_config(d: int) -> DfloatConfig:
     return DfloatConfig((DfloatSegment(0, d, 8, 23, 127),))
 
 
+def split_config(cfg: DfloatConfig, n_features: int) -> tuple[DfloatConfig, DfloatConfig]:
+    """Split ``cfg`` at a feature boundary into two burst-aligned tier configs.
+
+    The coarse tier keeps features ``[0, n_features)`` (the high-variance
+    PCA-leading prefix), the residual tier the rest, each re-packed as its own
+    independently burst-aligned bitstream with re-based ``start`` indices.
+    Per-feature ``n_exp``/``n_man``/``bias`` are preserved, so decoding a
+    feature from either tier is bit-identical to decoding it from the parent
+    layout — tiered search stays bit-exact vs ``storage="packed"`` for *any*
+    split point.  A segment run straddling the boundary is sliced in two
+    (same format, two runs).  Degenerate splits yield an empty tier (zero
+    segments, zero packed words).
+    """
+    if not 0 <= n_features <= cfg.dim:
+        raise ValueError(f"n_features={n_features} outside [0, {cfg.dim}]")
+    coarse, resid = [], []
+    for s in cfg.segments:
+        lo, hi = s.start, s.start + s.n_dims
+        c_hi = min(hi, n_features)
+        if c_hi > lo:
+            coarse.append(DfloatSegment(lo, c_hi - lo, s.n_exp, s.n_man, s.bias))
+        r_lo = max(lo, n_features)
+        if hi > r_lo:
+            resid.append(DfloatSegment(r_lo - n_features, hi - r_lo,
+                                       s.n_exp, s.n_man, s.bias))
+    return (DfloatConfig(tuple(coarse), cfg.burst_bits, cfg.devices_per_subchannel),
+            DfloatConfig(tuple(resid), cfg.burst_bits, cfg.devices_per_subchannel))
+
+
+def pack_tiers(db: np.ndarray, cfg: DfloatConfig,
+               n_features: int) -> tuple[np.ndarray, np.ndarray]:
+    """Pack (N, D) f32 rows into the two tier bitstreams of
+    ``split_config(cfg, n_features)``.  Field bits equal the corresponding
+    fields of ``pack_db(db, cfg)`` (quantization is per-feature)."""
+    ccfg, rcfg = split_config(cfg, n_features)
+    return (pack_db(db[:, :n_features], ccfg),
+            pack_db(db[:, n_features:], rcfg))
+
+
 # ---------------------------------------------------------------------------
 # field encode / decode / emulate (numpy)
 # ---------------------------------------------------------------------------
@@ -308,6 +347,8 @@ def unpack_rows_jnp(packed, cfg: DfloatConfig):
     layout, w_words = burst_layout(cfg)
     wpb = cfg.burst_bits // 32
     c = packed.shape[0]
+    if not layout:                      # empty tier of a degenerate split
+        return jnp.zeros((c, 0), jnp.float32)
     outs = []
     for s, word0, nb, per in layout:
         quad = packed[:, word0 : word0 + nb * wpb].reshape(c, nb, wpb)

@@ -62,6 +62,19 @@ class FeeParams:
     def as_dict(self) -> dict:
         return dict(alpha=self.alpha, beta=self.beta, margin=self.margin)
 
+    def split(self, n_coarse: int) -> "tuple[FeeParams, FeeParams]":
+        """Per-tier parameter views for tiered storage: checkpoints
+        ``[0, n_coarse)`` drive the resident coarse tier's exit decisions,
+        the rest correct the residual continuation.  The fit is already
+        per-checkpoint (each alpha/beta/margin entry corrects its own
+        prefix), so the tier slices *are* the per-tier re-fit, and their
+        concatenation reproduces the unsplit sequence exactly — which is
+        what keeps tiered scoring bit-identical to packed."""
+        return (FeeParams(self.alpha[:n_coarse], self.beta[:n_coarse],
+                          self.margin[:n_coarse]),
+                FeeParams(self.alpha[n_coarse:], self.beta[n_coarse:],
+                          self.margin[n_coarse:]))
+
 
 jax.tree_util.register_dataclass(
     FeeParams, data_fields=["alpha", "beta", "margin"], meta_fields=[])

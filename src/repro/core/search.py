@@ -59,7 +59,7 @@ from repro.kernels import ops as kops
 BIG = jnp.float32(3.0e38)
 
 FEE_BACKENDS = ("auto", "jnp", "pallas", "pallas_skip_dma")
-STORAGES = ("f32", "packed")
+STORAGES = ("f32", "packed", "tiered")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,13 +194,26 @@ def _score(q, tgt, threshold, fee: FeeParams | None, cfg: SearchConfig,
 
     With ``cfg.storage == "packed"`` the batch ``tgt`` is (L, W) packed uint32
     rows straight from the bitstream; the fused kernel decodes them on the fly
-    (bit-identical to scoring the ``emulate_db`` f32 view).  ``alive`` is the
-    optional tombstone lane mask: dead lanes join the FEE exit mask before the
-    first segment, so they report ``segs_used == 0`` (no streamed bursts).
+    (bit-identical to scoring the ``emulate_db`` f32 view).  With
+    ``cfg.storage == "tiered"`` it is the (coarse, residual) row pair and
+    ``dfl_cfg`` the matching config pair — the coarse tier makes the exit
+    decision and residual words move only for lanes that survive it.
+    ``alive`` is the optional tombstone lane mask: dead lanes join the FEE
+    exit mask before the first segment, so they report ``segs_used == 0``
+    (no streamed bursts — and for tiered, no residual fetch either).
     """
     packed = cfg.storage == "packed"
-    n_segs = (dfl_cfg.dim if packed else tgt.shape[1]) // cfg.seg
+    tiered = cfg.storage == "tiered"
+    if tiered:
+        n_segs = (dfl_cfg[0].dim + dfl_cfg[1].dim) // cfg.seg
+    else:
+        n_segs = (dfl_cfg.dim if packed else tgt.shape[1]) // cfg.seg
     if cfg.use_fee:
+        if tiered:
+            return kops.fee_distance_tiered(
+                q, tgt[0], tgt[1], threshold, fee.alpha, fee.beta, fee.margin,
+                coarse_cfg=dfl_cfg[0], resid_cfg=dfl_cfg[1], seg=cfg.seg,
+                metric=cfg.metric, backend=cfg.fee_backend, lane_mask=alive)
         if packed:
             return kops.fee_distance_packed(
                 q, tgt, threshold, fee.alpha, fee.beta, fee.margin,
@@ -209,7 +222,11 @@ def _score(q, tgt, threshold, fee: FeeParams | None, cfg: SearchConfig,
         return kops.fee_distance(q, tgt, threshold, fee.alpha, fee.beta,
                                  fee.margin, seg=cfg.seg, metric=cfg.metric,
                                  backend=cfg.fee_backend, lane_mask=alive)
-    if packed:
+    if tiered:
+        tgt = kops.dfloat_unpack_tiered_rows(tgt[0], tgt[1], dfl_cfg[0],
+                                             dfl_cfg[1],
+                                             backend=cfg.fee_backend)
+    elif packed:
         tgt = kops.dfloat_unpack_rows(tgt, dfl_cfg, backend=cfg.fee_backend)
     score = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
     rejected = (jnp.zeros(tgt.shape[0], bool) if alive is None else ~alive)
@@ -282,7 +299,11 @@ def _hop_body(state, vectors, adj, q, fee: FeeParams | None, cfg: SearchConfig,
     live = fresh if alive is None else fresh & alive
 
     threshold = beam_d[-1]
-    tgt = vectors[safe]                          # (L, D) f32 / (L, W) packed
+    tiered = cfg.storage == "tiered"
+    if tiered:                # (L, Wc) coarse + (L, Wr) residual tier rows
+        tgt = (vectors[0][safe], vectors[1][safe])
+    else:
+        tgt = vectors[safe]                      # (L, D) f32 / (L, W) packed
     score, rejected, segs_used = _score(q, tgt, threshold, fee, cfg, dfl_cfg,
                                         alive)
 
@@ -300,13 +321,24 @@ def _hop_body(state, vectors, adj, q, fee: FeeParams | None, cfg: SearchConfig,
         n_eval=live.sum().astype(jnp.int32),
         dims=(jnp.where(live, segs_used, 0).sum() * cfg.seg).astype(jnp.int32),
     )
+    if tiered:
+        # a lane crossed into the residual tier iff it survived every coarse
+        # checkpoint — exited lanes are never charged residual bytes
+        n_coarse = dfl_cfg[0].dim // cfg.seg
+        trace["n_resid"] = (live & (segs_used > n_coarse)).sum() \
+            .astype(jnp.int32)
     return (beam_ids, beam_d, expanded, visited), trace
 
 
 def _init_state(q, entry, vectors, cfg: SearchConfig, n_words,
                 dfl_cfg: dfl.DfloatConfig | None = None):
     ef = cfg.ef
-    row = vectors[entry][None, :]
+    if cfg.storage == "tiered":
+        row = kops.dfloat_unpack_tiered_rows(
+            vectors[0][entry][None, :], vectors[1][entry][None, :],
+            dfl_cfg[0], dfl_cfg[1], backend=cfg.fee_backend)
+    else:
+        row = vectors[entry][None, :]
     if cfg.storage == "packed":
         row = kops.dfloat_unpack_rows(row, dfl_cfg, backend=cfg.fee_backend)
     d0 = fee_mod.exact_distance(q, row, metric=cfg.metric)[0]
@@ -333,26 +365,44 @@ def _search_batch(vectors, adj, fee, tombstone, queries, entries, *,
     None for an immutable index — None flattens to nothing, so the static
     jit key distinguishes the two shapes of program).
     """
-    n_words = -(-vectors.shape[0] // 32)
+    tiered = cfg.storage == "tiered"
+    n_rows = (vectors[0] if tiered else vectors).shape[0]
+    n_words = -(-n_rows // 32)
 
     def search_one(q, entry):
         state = _init_state(q, entry, vectors, cfg, n_words, dfl_cfg)
+        if tiered:
+            # (evaluated lanes, residual-tier fetches) — cheap enough to
+            # carry through the fast path too, so serving can report the
+            # survivor-fetch fraction without a full trace
+            state = (state, jnp.zeros((2,), jnp.int32))
+        counters = None
         if trace:
             def step(s, _):
-                s, t = _hop_body(s, vectors, adj, q, fee, cfg, dfl_cfg,
-                                 tombstone)
+                s, t = _hop_body(s[0] if tiered else s, vectors, adj, q, fee,
+                                 cfg, dfl_cfg, tombstone)
+                if tiered:
+                    s = (s, jnp.zeros((2,), jnp.int32))
                 return s, t
             state, traces = jax.lax.scan(step, state, None, length=cfg.hops())
         else:
             def cond(s):
-                _, beam_d, expanded, _ = s
+                _, beam_d, expanded, _ = s[0] if tiered else s
                 return ((~expanded) & (beam_d < BIG)).any()
             def body(s):
+                if tiered:
+                    core, cnt = s
+                    core, t = _hop_body(core, vectors, adj, q, fee, cfg,
+                                        dfl_cfg, tombstone)
+                    return (core, cnt + jnp.stack([t["n_eval"],
+                                                   t["n_resid"]]))
                 s, _ = _hop_body(s, vectors, adj, q, fee, cfg, dfl_cfg,
                                  tombstone)
                 return s
             state = jax.lax.while_loop(cond, body, state)
             traces = None
+        if tiered:
+            state, counters = state
         beam_ids, beam_d, _, _ = state
         if tombstone is not None:
             beam_ids, beam_d = exclude_dead(beam_ids, beam_d, tombstone)
@@ -362,6 +412,10 @@ def _search_batch(vectors, adj, fee, tombstone, queries, entries, *,
             out["hops"] = (traces["node"] >= 0).any(-1).sum()
             out["n_eval"] = traces["n_eval"].sum()
             out["dims"] = traces["dims"].sum()
+            if tiered:
+                out["n_resid"] = traces["n_resid"].sum()
+        elif tiered:
+            out["n_eval"], out["n_resid"] = counters[0], counters[1]
         return out
 
     return jax.vmap(search_one)(queries, entries)
@@ -379,21 +433,33 @@ def make_searcher(vectors, adj, cfg: SearchConfig,
     ``fee`` takes a typed :class:`FeeParams`; legacy alpha/beta/margin dicts
     are coerced.  ``tombstone`` ((ceil(N/32),) uint32, bit = dead row) masks
     deleted rows out of scoring and results (streaming-mutation snapshots).
+    With ``cfg.storage == "tiered"``, ``vectors`` is the (coarse, residual)
+    bitstream pair and ``dfloat_cfg`` the matching (coarse, residual) config
+    pair from ``dfloat.split_config``.
     """
+    tiered = cfg.storage == "tiered"
     if cfg.storage == "packed" and dfloat_cfg is None:
         raise ValueError('cfg.storage="packed" requires dfloat_cfg=DfloatConfig')
-    vectors = jnp.asarray(vectors)
+    if tiered and not (isinstance(dfloat_cfg, tuple) and len(dfloat_cfg) == 2):
+        raise ValueError('cfg.storage="tiered" requires dfloat_cfg='
+                         "(coarse_cfg, residual_cfg)")
+    if tiered:
+        vectors = (jnp.asarray(vectors[0]), jnp.asarray(vectors[1]))
+        n_rows = vectors[0].shape[0]
+    else:
+        vectors = jnp.asarray(vectors)
+        n_rows = vectors.shape[0]
     adj = jnp.asarray(adj, jnp.int32)
     fp = FeeParams.coerce(fee)
     if cfg.use_fee and fp is None:
         raise ValueError("cfg.use_fee=True requires fee=FeeParams(...) "
                          "(use FeeParams.identity(n_seg) for plain d_part exit)")
-    dfl_cfg = dfloat_cfg if cfg.storage == "packed" else None
+    dfl_cfg = dfloat_cfg if cfg.storage in ("packed", "tiered") else None
     if tombstone is not None:
         tombstone = jnp.asarray(tombstone, jnp.uint32)
-        if tombstone.shape != (-(-vectors.shape[0] // 32),):
+        if tombstone.shape != (-(-n_rows // 32),):
             raise ValueError(f"tombstone shape {tombstone.shape} does not "
-                             f"cover {vectors.shape[0]} rows")
+                             f"cover {n_rows} rows")
 
     def search(queries, entries):
         return _search_batch(vectors, adj, fp, tombstone, jnp.asarray(queries),
@@ -469,6 +535,16 @@ def search_graph(vectors, graph, queries, cfg: SearchConfig,
         if descent_vectors is None:
             descent_vectors = lambda ids: dfl.unpack_db(
                 np.asarray(vectors)[ids], dfloat_cfg)
+    elif cfg.storage == "tiered":
+        if not (isinstance(dfloat_cfg, tuple) and len(dfloat_cfg) == 2):
+            raise ValueError('cfg.storage="tiered" requires dfloat_cfg='
+                             "(coarse_cfg, residual_cfg)")
+        if descent_vectors is None:
+            xc, xr = (np.asarray(vectors[0]), np.asarray(vectors[1]))
+            descent_vectors = lambda ids: np.concatenate(
+                [dfl.unpack_db(t[ids], c)
+                 for t, c in ((xc, dfloat_cfg[0]), (xr, dfloat_cfg[1]))
+                 if c.dim], axis=1)
     else:
         descent_vectors = vectors if descent_vectors is None else descent_vectors
     entries = descend_entry(descent_vectors, graph, queries, cfg.metric)

@@ -65,7 +65,10 @@ BIG = jnp.float32(3.0e38)
 class ShardedDB:
     """Abstract or concrete device-side DaM database layout.
 
-    vectors   (C, n_loc, d)   row shards (axis 0 = model shard)
+    vectors   (C, n_loc, d)   row shards (axis 0 = model shard); for tiered
+                              storage a (coarse, residual) pair of such
+                              arrays — both row-sharded identically, so
+                              residual words never cross shards
     local_ids (C, n_loc)      global id of each local slot (-1 pad)
     part_adj  (C, N, Mc)      per-shard neighbor partitions (local slots, -1 pad)
     tombstone (C, W_loc)      per-shard dead-slot words (uint32, bit = local
@@ -95,9 +98,11 @@ def build_sharded_db(vectors: np.ndarray, dam, dtype=None,
                      tombstone: np.ndarray | None = None) -> ShardedDB:
     """Pack a core.graph.DaMPartition into the stacked device layout.
 
-    ``vectors`` may be the dense float rows or the packed uint32 bitstream
-    (row layout is identical either way); by default integer inputs keep
-    their dtype and float inputs are cast to f32 (the pre-packed guarantee).
+    ``vectors`` may be the dense float rows, the packed uint32 bitstream
+    (row layout is identical either way), or a (coarse, residual) tier pair —
+    each tier is then sharded with the same row map, keeping residual fetches
+    shard-local.  By default integer inputs keep their dtype and float inputs
+    are cast to f32 (the pre-packed guarantee).
 
     ``tombstone`` is the *global* packed dead-row bitmap of an Index
     snapshot; it is re-folded here into per-shard words indexed by local
@@ -105,6 +110,11 @@ def build_sharded_db(vectors: np.ndarray, dam, dtype=None,
     needs only its own O(n_loc/32) words — the replicated global bitmap
     never reaches the devices.
     """
+    if isinstance(vectors, tuple):
+        coarse = build_sharded_db(vectors[0], dam, dtype, tombstone)
+        resid = build_sharded_db(vectors[1], dam, dtype)
+        return dataclasses.replace(
+            coarse, vectors=(coarse.vectors, resid.vectors))
     c = dam.n_channels
     n_loc = max(len(ids) for ids in dam.local_ids)
     d = vectors.shape[1]
@@ -179,7 +189,13 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
     ``fee`` takes a typed :class:`FeeParams`.  With ``cfg.storage ==
     "packed"`` the ShardedDB holds packed uint32 rows and each shard scores
     its local partition straight from the bitstream (``dfloat_cfg`` supplies
-    the static layout).  ``tombstone`` is a flag: truthy means the ShardedDB
+    the static layout).  With ``cfg.storage == "tiered"`` the ShardedDB
+    holds a (coarse, residual) row pair and ``dfloat_cfg`` is the matching
+    (coarse_cfg, resid_cfg) tuple; both tiers are sharded by the same row
+    map, so residual words are only ever touched by the shard that owns
+    them — the frontier broadcast and the owner-targeted all_to_all carry
+    exactly the same payload as the packed path (ids + distances, never
+    residual bytes).  ``tombstone`` is a flag: truthy means the ShardedDB
     carries per-shard dead-slot words (``build_sharded_db(...,
     tombstone=...)``) that fold into each shard's FEE lane mask.
     ``overlap=True`` selects the double-buffered pipeline (stale-threshold
@@ -201,8 +217,12 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
     if cfg.use_fee and fp is None:
         raise ValueError("cfg.use_fee=True requires fee=FeeParams(...)")
     packed = cfg.storage == "packed"
+    tiered = cfg.storage == "tiered"
     if packed and dfloat_cfg is None:
         raise ValueError('cfg.storage="packed" requires dfloat_cfg=DfloatConfig')
+    if tiered and not (isinstance(dfloat_cfg, tuple) and len(dfloat_cfg) == 2):
+        raise ValueError('cfg.storage="tiered" requires dfloat_cfg='
+                         "(coarse_cfg, resid_cfg)")
     has_tomb = bool(tombstone is not None and tombstone is not False)
     e = min(cfg.expand, cfg.ef)
 
@@ -211,12 +231,24 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
         slot = jnp.argmax(ids_loc == gid)
         return jnp.where(ids_loc[slot] == gid, slot, -1)
 
+    def _gather_rows(vec_loc, idx):
+        """Row gather that transparently spans both tiers for tiered storage."""
+        if tiered:
+            return (vec_loc[0][idx], vec_loc[1][idx])
+        return vec_loc[idx]
+
     def _decode_row(vec_loc, slot):
         """This shard's f32 row for a local slot (0 when not resident)."""
-        row = vec_loc[jnp.maximum(slot, 0)]
-        if packed:
-            row = kops.dfloat_unpack_rows(row[None], dfloat_cfg,
-                                          backend=cfg.fee_backend)[0]
+        safe = jnp.maximum(slot, 0)
+        if tiered:
+            row = kops.dfloat_unpack_tiered_rows(
+                vec_loc[0][safe][None], vec_loc[1][safe][None],
+                dfloat_cfg[0], dfloat_cfg[1], backend=cfg.fee_backend)[0]
+        else:
+            row = vec_loc[safe]
+            if packed:
+                row = kops.dfloat_unpack_rows(row[None], dfloat_cfg,
+                                              backend=cfg.fee_backend)[0]
         return jnp.where(slot >= 0, row, 0.0)
 
     def _score_lanes(q, tgt, exit_thr, admit_thr, alive):
@@ -226,9 +258,14 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
             dist, admit, _segs = kops.fee_distance_stale(
                 q, tgt, exit_thr, admit_thr, fp.alpha, fp.beta, fp.margin,
                 seg=cfg.seg, metric=cfg.metric, backend=cfg.fee_backend,
-                lane_mask=alive, dfloat_cfg=dfloat_cfg if packed else None)
+                lane_mask=alive,
+                dfloat_cfg=dfloat_cfg if (packed or tiered) else None)
             return dist, admit
-        if packed:
+        if tiered:
+            tgt = kops.dfloat_unpack_tiered_rows(tgt[0], tgt[1],
+                                                 dfloat_cfg[0], dfloat_cfg[1],
+                                                 backend=cfg.fee_backend)
+        elif packed:
             tgt = kops.dfloat_unpack_rows(tgt, dfloat_cfg,
                                           backend=cfg.fee_backend)
         dist = fee_mod.exact_distance(q, tgt, metric=cfg.metric)
@@ -241,7 +278,8 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
         # block shapes: vectors (1, n_loc, d); queries (Q_loc, d) — queries
         # ride the data axes and are *replicated* over model; this shard owns
         # the contiguous chunk [j*Q_own, (j+1)*Q_own) of them.
-        vec_loc, ids_loc, padj_loc = vectors[0], local_ids[0], part_adj[0]
+        vec_loc = (tuple(v[0] for v in vectors) if tiered else vectors[0])
+        ids_loc, padj_loc = local_ids[0], part_adj[0]
         tomb_loc = None if tomb is None else tomb[0]
         n_loc, mc = ids_loc.shape[0], padj_loc.shape[1]
         w_loc = -(-n_loc // 32)
@@ -297,7 +335,8 @@ def make_sharded_searcher(mesh: Mesh, cfg: SearchConfig, n_total: int,
             vis_q = vis_q.at[w].add(jnp.where(fresh, bit, jnp.uint32(0)))
             alive = (None if tomb_loc is None
                      else (tomb_loc[w] & bit) == 0)
-            dist, admit = _score_lanes(q, vec_loc[safe], thr_q, thr_q, alive)
+            dist, admit = _score_lanes(q, _gather_rows(vec_loc, safe),
+                                       thr_q, thr_q, alive)
             cand_d = jnp.where(fresh & admit, dist, BIG)
             gids = jnp.where(cand_d < BIG, ids_loc[safe], -1)
             return *search_mod.local_topk_reduce(gids, cand_d, r), vis_q

@@ -52,22 +52,25 @@ def make(index, backend: str, params: SearchParams, **opts):
     raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
 
 
-def _base_vectors(index, params: SearchParams) -> np.ndarray:
-    """Host array the chosen storage mode scores against."""
+def _base_vectors(index, params: SearchParams):
+    """Host array (or (coarse, residual) pair for tiered) the chosen storage
+    mode scores against."""
     if params.storage == "packed":
         return index.db_packed
+    if params.storage == "tiered":
+        return index.tier_arrays()
     return index.db_q if params.use_dfloat else index.db_rot
 
 
 def _descent_rows(index, params: SearchParams):
     """f32 row provider for the upper-layer greedy descent.
 
-    Descent touches only the tiny upper-level subsets, so the packed path
-    emulates just those rows instead of materializing a full f32 DB copy —
-    and memoizes them per level (the fetched rows depend only on the fixed
+    Descent touches only the tiny upper-level subsets, so the packed/tiered
+    paths emulate just those rows instead of materializing a full f32 DB copy —
+    and memoize them per level (the fetched rows depend only on the fixed
     level ids, not the queries), so repeated ``run()`` calls don't re-emulate."""
     if params.use_dfloat:
-        if params.storage == "packed":
+        if params.storage in ("packed", "tiered"):
             cache = {}  # id(level_ids) -> rows; graph.levels arrays are fixed
 
             def rows(ids):
@@ -82,7 +85,11 @@ def _descent_rows(index, params: SearchParams):
 
 
 def _dfloat_cfg(index, params: SearchParams):
-    return index.dfloat_cfg if params.storage == "packed" else None
+    if params.storage == "packed":
+        return index.dfloat_cfg
+    if params.storage == "tiered":
+        return index.tier_cfgs()
+    return None
 
 
 def _fee(index, params: SearchParams, fee=None) -> FeeParams | None:
@@ -207,11 +214,13 @@ def ndpsim_searcher(index, params: SearchParams, *, hw=None, flags=None,
     owner = gmod.map_owners(index.n, hw.n_subchannels, owner_policy, seed=seed)
     dfloat_cfg = (index.dfloat_cfg if params.use_dfloat
                   else fp32_config(index.dim))
+    tier_cfgs = index.tier_cfgs() if params.storage == "tiered" else None
 
     def run(queries) -> SearchResult:
         res = local(queries)
         res.sim = simulate_ndp(res, owner, index.graph.base_adjacency, hw,
-                               flags, dfloat_cfg, index.seg)
+                               flags, dfloat_cfg, index.seg,
+                               tier_cfgs=tier_cfgs)
         mut = (index.timings or {}).get("mutation")
         if mut:
             # streaming snapshot: append/repair traffic rides along as

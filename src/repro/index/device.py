@@ -86,7 +86,9 @@ class DeviceCache:
         self.donate = donate
         self._prev = None          # last installed snapshot (host refs)
         self._prev_n = 0           # its allocated row count
-        self._db = self._adj = self._tomb = None   # device arrays
+        # device arrays; _db holds the coarse tier for storage="tiered" and
+        # _db_res the residual tier (each tier delta-uploads independently)
+        self._db = self._db_res = self._adj = self._tomb = None
 
     def reset(self) -> None:
         """Forget the resident generation (next install is a full upload).
@@ -96,18 +98,22 @@ class DeviceCache:
         be trusted afterwards."""
         self._prev = None
         self._prev_n = 0
-        self._db = self._adj = self._tomb = None
+        self._db = self._db_res = self._adj = self._tomb = None
 
     # -- host-side views ----------------------------------------------------
     def _host_db_full(self, idx) -> np.ndarray:
         if self.storage == "packed":
             return idx.db_packed
+        if self.storage == "tiered":
+            return idx.tier_arrays()[0]
         return idx.db_q if self.use_dfloat else idx.db_rot
 
     def _host_db_tail(self, idx, lo: int, hi: int) -> np.ndarray:
         """Appended payload rows without materializing a full ``db_q``."""
         if self.storage == "packed":
             return idx.db_packed[lo:hi]
+        if self.storage == "tiered":
+            return idx.tier_arrays()[0][lo:hi]
         if self.use_dfloat:
             return idx.emulated_rows(np.arange(lo, hi))
         return idx.db_rot[lo:hi]
@@ -146,7 +152,9 @@ class DeviceCache:
         return stats
 
     def _seed(self, idx) -> None:
-        idx.seed_device(("db", self.storage, self.use_dfloat), self._db)
+        db = ((self._db, self._db_res) if self.storage == "tiered"
+              else self._db)
+        idx.seed_device(("db", self.storage, self.use_dfloat), db)
         idx.seed_device("adj", self._adj)
         if self._tomb is not None:
             idx.seed_device("tombstone", self._tomb)
@@ -163,7 +171,7 @@ class DeviceCache:
         donated buffers are consumed by the warmup splices.
         """
         compiled = 0
-        for name in ("_db", "_adj", "_tomb"):
+        for name in ("_db", "_db_res", "_adj", "_tomb"):
             arr = getattr(self, name)
             if arr is None:
                 continue
@@ -186,6 +194,9 @@ class DeviceCache:
         # itemsize is 4 for every representation (f32 or uint32 words)
         if self.storage == "packed":
             return idx.db_packed.nbytes
+        if self.storage == "tiered":
+            xc, xr = idx.tier_arrays()
+            return xc.nbytes + xr.nbytes
         return idx.db_rot.nbytes   # db_q has db_rot's shape/dtype
 
     def _install_full(self, idx, full_bytes: int) -> UploadStats:
@@ -193,12 +204,16 @@ class DeviceCache:
 
         db = self._host_db_full(idx)
         self._db = jnp.asarray(db)
-        self._adj = jnp.asarray(idx.graph.base_adjacency, jnp.int32)
-        self._tomb = (None if idx.tombstone is None
-                      else jnp.asarray(idx.tombstone, jnp.uint32))
         per = dict(db=int(db.nbytes), adj=int(idx.graph.base_adjacency.nbytes),
                    tombstone=int(idx.tombstone.nbytes
                                  if idx.tombstone is not None else 0))
+        if self.storage == "tiered":
+            res = idx.tier_arrays()[1]
+            self._db_res = jnp.asarray(res)
+            per["db_residual"] = int(res.nbytes)
+        self._adj = jnp.asarray(idx.graph.base_adjacency, jnp.int32)
+        self._tomb = (None if idx.tombstone is None
+                      else jnp.asarray(idx.tombstone, jnp.uint32))
         return UploadStats(generation=idx.generation, mode="full",
                            h2d_bytes=sum(per.values()), full_bytes=full_bytes,
                            reused_rows=0, per_array=per)
@@ -213,6 +228,12 @@ class DeviceCache:
         tail_rows = self._host_db_tail(idx, prev_n, new_n)
         self._db, b = self._splice(self._db, tail_ids, tail_rows)
         per["db"] = b
+        if self.storage == "tiered":
+            # each tier splices independently — appended rows ship their
+            # coarse and residual words, resident rows ship neither
+            self._db_res, b = self._splice(self._db_res, tail_ids,
+                                           idx.tier_arrays()[1][prev_n:new_n])
+            per["db_residual"] = b
 
         # adjacency: exact host diff vs the previous snapshot's (COW) copy —
         # catches tail rows, reverse-edge patches and repair rewrites alike

@@ -8,11 +8,16 @@ Online (Fig. 6 lower):  hierarchy descent -> FEE-sPCA beam search, executed by
 any of the pluggable backends (``local`` jit/vmap, ``sharded`` shard_map DaM,
 ``ndpsim`` timing model) behind one ``searcher(backend=...)`` call.
 
-Storage model (packed-native, format v2): the burst-aligned Dfloat bitstream
+Storage model (packed-native, format v3): the burst-aligned Dfloat bitstream
 ``db_packed`` is the canonical index payload.  The f32 quantized view ``db_q``
 is *derived* — reconstructed on demand via ``dfloat.emulate_db`` (bit-identical
 to decoding the bitstream) and cached; it is no longer persisted, which cuts
 the on-disk artifact and the host/device footprint by the full f32 copy.
+For ``storage="tiered"`` the row splits into a resident coarse tier (the
+high-variance PCA-leading segment prefix) and a residual tier fetched only for
+lanes that survive the coarse-tier exit; a v3 artifact with ``spec.tier_split``
+set persists both tier bitstreams (checksummed), otherwise they are derived
+lazily from ``db_rot``.
 
 Persistence: ``Index.save(path)`` writes ``<path>/spec.json`` (build spec +
 Dfloat layout + graph metadata) and ``<path>/arrays.npz`` (rotation, fee fit,
@@ -40,10 +45,12 @@ from repro.resilience import CorruptArtifactError
 from repro.resilience import checksum as cks
 from repro.resilience import faults
 
-FORMAT_VERSION = 2          # v2 dropped the persisted db_q copy
-DELTA_FORMAT_VERSION = 3    # v3: streaming-mutation delta segments (WAL),
-                            # written *alongside* a v2 base by repro.streaming
-KNOWN_FORMATS = (1, 2)
+FORMAT_VERSION = 3          # v3 persists the (coarse, residual) tier split;
+                            # v2 dropped the persisted db_q copy
+DELTA_FORMAT_VERSION = 3    # streaming-mutation delta segments (WAL) reuse the
+                            # number, but live under <index>/delta/ with a
+                            # manifest.json — an index dir always has spec.json
+KNOWN_FORMATS = (1, 2, 3)
 
 
 @dataclasses.dataclass
@@ -76,6 +83,11 @@ class Index:
     n_rows: int | None = None
     _db_q: np.ndarray | None = dataclasses.field(default=None, repr=False,
                                                  compare=False)
+    # cached (coarse, residual) packed tiers for storage="tiered"; derived
+    # lazily from db_rot unless the artifact persisted them (format v3 with
+    # spec.tier_split set) or a streaming freeze seeded them
+    _tiers: tuple | None = dataclasses.field(default=None, repr=False,
+                                             compare=False)
     _searchers: dict = dataclasses.field(default_factory=dict, repr=False,
                                          compare=False)
     _device: dict = dataclasses.field(default_factory=dict, repr=False,
@@ -126,6 +138,33 @@ class Index:
             self._db_q = dfl.emulate_db(self.db_rot, self.dfloat_cfg)
         return self._db_q
 
+    @property
+    def tier_split(self) -> int:
+        """Resolved coarse-tier size in FEE segments for ``storage="tiered"``:
+        ``spec.tier_split`` when set, else the energy-based auto split."""
+        n_segs = self.dim // self.seg
+        if self.spec.tier_split is not None:
+            ts = self.spec.tier_split
+            if not 0 <= ts <= n_segs:
+                raise ValueError(
+                    f"spec.tier_split={ts} outside [0, {n_segs}] for "
+                    f"dim={self.dim}, seg={self.seg}")
+            return ts
+        return pca_mod.suggest_tier_split(self.spca.eigvals, self.seg)
+
+    def tier_cfgs(self) -> tuple[dfl.DfloatConfig, dfl.DfloatConfig]:
+        """(coarse, residual) Dfloat layouts at the resolved tier split."""
+        return dfl.split_config(self.dfloat_cfg, self.tier_split * self.seg)
+
+    def tier_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """(coarse, residual) packed tier bitstreams — field-for-field the
+        same bits as ``db_packed`` re-grouped at the tier boundary.  Derived
+        from ``db_rot`` and cached when the artifact didn't persist them."""
+        if self._tiers is None:
+            self._tiers = dfl.pack_tiers(self.db_rot, self.dfloat_cfg,
+                                         self.tier_split * self.seg)
+        return self._tiers
+
     def emulated_rows(self, ids: np.ndarray) -> np.ndarray:
         """Quantized f32 rows for ``ids`` without materializing full ``db_q``
         (per-row emulation; used by the upper-layer greedy descent)."""
@@ -142,11 +181,15 @@ class Index:
 
         key = ("db", storage, bool(use_dfloat))
         if key not in self._device:
-            if storage == "packed":
-                arr = self.db_packed
+            if storage == "tiered":
+                xc, xr = self.tier_arrays()
+                self._device[key] = (jnp.asarray(xc), jnp.asarray(xr))
             else:
-                arr = self.db_q if use_dfloat else self.db_rot
-            self._device[key] = jnp.asarray(arr)
+                if storage == "packed":
+                    arr = self.db_packed
+                else:
+                    arr = self.db_q if use_dfloat else self.db_rot
+                self._device[key] = jnp.asarray(arr)
         return self._device[key]
 
     def device_adjacency(self):
@@ -286,9 +329,16 @@ class Index:
             db_rot=self.db_rot, db_packed=self.db_packed,
         )
         if self.tombstone is not None:
-            # still format v2: readers without streaming support simply see
-            # an extra optional array (dead rows then reappear in results)
+            # readers without streaming support simply see an extra optional
+            # array (dead rows then reappear in results)
             arrays["tombstone"] = self.tombstone
+        if self.spec.tier_split is not None:
+            # tier-native artifact: persist both tier bitstreams (checksummed
+            # below with everything else) plus the resolved split so load()
+            # serves storage="tiered" without repacking
+            xc, xr = self.tier_arrays()
+            arrays["db_coarse"], arrays["db_resid"] = xc, xr
+            meta["tier_split"] = self.tier_split
         for i, (ids, adj) in enumerate(self.graph.levels):
             arrays[f"g_ids{i}"] = ids
             arrays[f"g_adj{i}"] = adj
@@ -314,15 +364,14 @@ class Index:
         meta = json.loads((path / "spec.json").read_text())
         version = meta.get("format_version")
         if version not in KNOWN_FORMATS:
-            hint = (" (a v3 artifact is a streaming delta segment and only "
-                    "ever appears under <index>/delta/ — load the index "
-                    "directory with repro.streaming.MutableIndex.load)"
-                    if version == DELTA_FORMAT_VERSION else
-                    " — written by a newer naszip; upgrade this package to "
-                    "read it")
             raise ValueError(
                 f"unsupported index format v{version} at {path}: this build "
-                f"reads formats {KNOWN_FORMATS}{hint}")
+                f"reads formats {KNOWN_FORMATS} — written by a newer naszip; "
+                "upgrade this package to read it.  (Streaming delta segments "
+                "also stamp a format_version, but they live under "
+                "<index>/delta/ with a manifest.json, never a spec.json — "
+                "replay them via repro.streaming.MutableIndex.load on the "
+                "base index directory.)")
         spec = IndexSpec(**meta["spec"])
         try:
             with np.load(path / "arrays.npz", allow_pickle=False) as z:
@@ -359,7 +408,10 @@ class Index:
                    generation=meta.get("generation"),
                    n_rows=meta.get("n_rows"),
                    # v1 artifacts carried the derived copy; seed the cache
-                   _db_q=a.get("db_q"))
+                   _db_q=a.get("db_q"),
+                   # v3 tier-native artifacts carry both tier bitstreams
+                   _tiers=((a["db_coarse"], a["db_resid"])
+                           if "db_coarse" in a else None))
 
     # -- search -------------------------------------------------------------
     def searcher(self, backend: str = "local",

@@ -40,6 +40,14 @@ class IndexSpec:
     dfloat_proxy: bool = False                # exact-topk proxy vs graph search
     prune: bool = True                        # RNG/occlusion prune base layer
     seed: int = 0
+    tier_split: int | None = None             # FEE segments kept in the
+                                              # resident coarse tier for
+                                              # storage="tiered"; None -> auto
+                                              # (smallest prefix holding 90%
+                                              # rotated energy); 0 and n_segs
+                                              # are the degenerate
+                                              # all-residual / all-coarse
+                                              # splits
 
     @classmethod
     def for_db(cls, db, **overrides) -> "IndexSpec":
@@ -76,10 +84,16 @@ class SearchParams:
                                # parity), 0.5 halves merge width at recall
                                # parity
 
+    VALID_STORAGES = ("f32", "packed", "tiered")
+
     def __post_init__(self):
-        if self.storage == "packed" and not self.use_dfloat:
-            raise ValueError('storage="packed" scores the Dfloat bitstream; '
-                             "it requires use_dfloat=True")
+        if self.storage not in self.VALID_STORAGES:
+            # catch typos like "packd" here instead of a late backend KeyError
+            raise ValueError(f"storage={self.storage!r}; expected one of "
+                             f"{self.VALID_STORAGES}")
+        if self.storage in ("packed", "tiered") and not self.use_dfloat:
+            raise ValueError(f'storage="{self.storage}" scores the Dfloat '
+                             "bitstream; it requires use_dfloat=True")
 
     def to_config(self, metric: str, seg: int) -> SearchConfig:
         return SearchConfig(ef=self.ef, k=self.k, metric=metric, seg=seg,
@@ -105,6 +119,7 @@ class SearchResult:
     hops: np.ndarray | None = None       # (Q,)
     n_eval: np.ndarray | None = None     # (Q,)
     dims: np.ndarray | None = None       # (Q,)
+    n_resid: np.ndarray | None = None    # (Q,) residual-tier fetches (tiered)
     trace: dict | None = None            # per-hop arrays (node/nbrs/segs/...)
     sim: Any = None                      # ndpsim.SimResult (ndpsim backend)
     generation: int | None = None        # MutableIndex snapshot generation
@@ -117,7 +132,16 @@ class SearchResult:
             else np.asarray(v))
         return cls(ids=np_of(out["ids"]), dists=np_of(out["dists"]),
                    hops=np_of(out.get("hops")), n_eval=np_of(out.get("n_eval")),
-                   dims=np_of(out.get("dims")), trace=np_of(out.get("trace")))
+                   dims=np_of(out.get("dims")), n_resid=np_of(out.get("n_resid")),
+                   trace=np_of(out.get("trace")))
+
+    @property
+    def residual_fetch_fraction(self) -> float | None:
+        """Fraction of evaluated lanes that fetched the residual tier
+        (``storage="tiered"`` only; exited lanes never pay residual bytes)."""
+        if self.n_resid is None or self.n_eval is None:
+            return None
+        return float(self.n_resid.sum()) / max(float(self.n_eval.sum()), 1.0)
 
     def __getitem__(self, key: str):
         """Dict-style access kept for smooth migration off result dicts."""

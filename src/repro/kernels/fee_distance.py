@@ -331,6 +331,135 @@ def _packed_skipdma_kernel(q_ref, xp_hbm, thr_ref, alpha_ref, beta_ref,
     _emit_outputs(s, dist_ref, rej_ref, segs_ref, acc, alive, nseg, n_segs)
 
 
+def _tiered_kernel(q_ref, xc_ref, xr_hbm, thr_ref, alpha_ref, beta_ref,
+                   margin_ref, dist_ref, rej_ref, segs_ref,
+                   acc, alive, nseg, buf, sem,
+                   *, metric: str, n_segs: int, last_valid_seg: int,
+                   c_blocks, r_blocks, tile_c: int):
+    """Two-tier fused decode+FEE: resident coarse blocks + gated residual DMA.
+
+    Blocks ``k < len(c_blocks)`` decode from the VMEM-resident coarse-tier
+    tile (the hot prefix that makes the exit decision); blocks beyond the
+    boundary fetch their burst-aligned word span from the *residual* bitstream
+    in HBM with a ``make_async_copy`` gated on the tile-exit flag — a tile
+    whose lanes all exited inside the coarse tier never issues a residual
+    fetch, so cold-tier traffic moves only for survivors.
+    """
+    i, s = pl.program_id(0), pl.program_id(1)
+    _init_scratch(s, acc, alive, nseg)
+    tile_alive = alive[:].max() > 0
+    n_coarse = len(c_blocks)
+
+    for k, (positions, _w0, _w1) in enumerate(c_blocks):
+        @pl.when(tile_alive & (s == k))
+        def _compute(k=k, positions=positions):
+            x = _decode_block(xc_ref[:, :], positions, 0)
+            part = _part_distance(x, q_ref[:, :], metric)
+            _accumulate_exit(part, k, thr_ref, alpha_ref, beta_ref, margin_ref,
+                             acc, alive, nseg, last_valid_seg)
+
+    for j, (positions, w0, w1) in enumerate(r_blocks):
+        k = n_coarse + j
+        @pl.when(tile_alive & (s == k))
+        def _fetch_compute(k=k, positions=positions, w0=w0, w1=w1):
+            dma = pltpu.make_async_copy(
+                xr_hbm.at[pl.ds(i * tile_c, tile_c), pl.ds(w0, w1 - w0)],
+                buf.at[:, pl.ds(0, w1 - w0)], sem)
+            dma.start()
+            dma.wait()
+            x = _decode_block(buf[:, :], positions, w0)
+            part = _part_distance(x, q_ref[:, :], metric)
+            _accumulate_exit(part, k, thr_ref, alpha_ref, beta_ref, margin_ref,
+                             acc, alive, nseg, last_valid_seg)
+
+    _emit_outputs(s, dist_ref, rej_ref, segs_ref, acc, alive, nseg, n_segs)
+
+
+@functools.partial(jax.jit, static_argnames=("coarse_cfg", "resid_cfg", "seg",
+                                             "metric", "tile_c", "interpret"))
+def fee_distance_tiered_pallas(q, xc, xr, threshold, alpha, beta, margin, *,
+                               coarse_cfg: dfl.DfloatConfig,
+                               resid_cfg: dfl.DfloatConfig, seg: int,
+                               metric: str = "l2", tile_c: int = 128,
+                               interpret: bool = True):
+    """q (D,) f32, xc (C, Wc) / xr (C, Wr) packed uint32 tier rows ->
+    (dist, rejected, segs_used).
+
+    Same contract as :func:`fee_distance_packed_pallas` over the parent
+    (unsplit) layout — ``dfloat.split_config`` preserves per-feature formats,
+    so outputs are bit-identical for any split.  The coarse tier is streamed
+    through the automatic BlockSpec pipeline (it is the resident payload);
+    residual word spans stay in HBM and move only through the gated manual
+    DMAs of live tiles.  Degenerate splits (one tier empty) collapse to the
+    single-tier packed kernel on the non-empty bitstream.
+    """
+    if coarse_cfg.dim == 0:
+        return fee_distance_packed_pallas(
+            q, xr, threshold, alpha, beta, margin, dfloat_cfg=resid_cfg,
+            seg=seg, metric=metric, tile_c=tile_c, interpret=interpret,
+            skip_dma=True)
+    if resid_cfg.dim == 0:
+        return fee_distance_packed_pallas(
+            q, xc, threshold, alpha, beta, margin, dfloat_cfg=coarse_cfg,
+            seg=seg, metric=metric, tile_c=tile_c, interpret=interpret)
+    c, wc = xc.shape
+    d = coarse_cfg.dim + resid_cfg.dim
+    n_segs = d // seg
+    assert n_segs * seg == d, (d, seg)
+    c_blocks, wc_words = _block_positions(coarse_cfg, seg)
+    r_blocks, wr_words = _block_positions(resid_cfg, seg)
+    assert wc == wc_words and xr.shape[1] == wr_words, (xc.shape, xr.shape)
+    pad_c = (-c) % tile_c
+    if pad_c:
+        xc = jnp.pad(xc, ((0, pad_c), (0, 0)))
+        xr = jnp.pad(xr, ((0, pad_c), (0, 0)))
+    cp = c + pad_c
+    q2 = q.reshape(1, d)
+    thr = jnp.reshape(threshold, (1,)).astype(jnp.float32)
+
+    kern = functools.partial(
+        _tiered_kernel, metric=metric, n_segs=n_segs,
+        last_valid_seg=n_segs - 1, c_blocks=tuple(c_blocks),
+        r_blocks=tuple(r_blocks), tile_c=tile_c)
+    dist, rej, segs = pl.pallas_call(
+        kern,
+        grid=(cp // tile_c, n_segs),
+        in_specs=[
+            pl.BlockSpec((1, seg), lambda i, s: (0, s)),            # q
+            pl.BlockSpec((tile_c, wc), lambda i, s: (i, 0)),        # coarse
+            pl.BlockSpec(memory_space=pltpu.ANY),                   # resid (HBM)
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # threshold
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # alpha
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # beta
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # margin
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_c, 1), lambda i, s: (i, 0)),
+            pl.BlockSpec((tile_c, 1), lambda i, s: (i, 0)),
+            pl.BlockSpec((tile_c, 1), lambda i, s: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((cp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((cp, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_c, 1), jnp.float32),   # acc
+            pltpu.VMEM((tile_c, 1), jnp.int32),     # alive
+            pltpu.VMEM((tile_c, 1), jnp.int32),     # nseg
+            pltpu.VMEM((tile_c, max(w1 - w0 for _, w0, w1 in r_blocks)),
+                       jnp.uint32),                 # residual landing buf
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=_compiler_params_cls()(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q2, xc, xr, thr, alpha.astype(jnp.float32), beta.astype(jnp.float32),
+      margin.astype(jnp.float32))
+    return dist[:c, 0], rej[:c, 0].astype(bool), segs[:c, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("dfloat_cfg", "seg", "metric",
                                              "tile_c", "interpret", "skip_dma"))
 def fee_distance_packed_pallas(q, xp, threshold, alpha, beta, margin, *,

@@ -18,7 +18,8 @@ from repro.kernels import ref as ref_ops
 from repro.kernels.dfloat_unpack import dfloat_unpack_pallas
 from repro.kernels.fee_distance import (fee_distance_packed_pallas,
                                         fee_distance_pallas,
-                                        fee_distance_skipdma_pallas)
+                                        fee_distance_skipdma_pallas,
+                                        fee_distance_tiered_pallas)
 
 
 def _on_tpu() -> bool:
@@ -95,6 +96,33 @@ def fee_distance_packed(q, xp, threshold, alpha, beta, margin, *,
     return _fold_lane_mask(out, lane_mask)
 
 
+def fee_distance_tiered(q, xc, xr, threshold, alpha, beta, margin, *,
+                        coarse_cfg: dfl.DfloatConfig,
+                        resid_cfg: dfl.DfloatConfig, seg: int,
+                        metric: str = "l2", backend: str = "auto",
+                        tile_c: int = 128, lane_mask=None):
+    """Tiered fused decode + early-exit distance: the resident coarse-tier
+    rows ``xc`` (C, Wc) make the exit decision; residual-tier rows ``xr``
+    (C, Wr) are fetched (gated async copies on the Pallas path) only while a
+    tile still has live lanes.
+
+    Bit-identical to :func:`fee_distance_packed` over the parent layout's
+    rows for any split point (``dfloat.split_config`` preserves per-feature
+    formats).  A lane fetched the residual tier iff ``segs_used >
+    coarse_cfg.dim // seg`` — exited lanes never pay residual bytes.
+    """
+    if _use_ref(backend):
+        out = ref_ops.fee_distance_tiered_ref(
+            q, xc, xr, threshold, alpha, beta, margin, coarse_cfg=coarse_cfg,
+            resid_cfg=resid_cfg, seg=seg, metric=metric)
+    else:
+        out = fee_distance_tiered_pallas(
+            q, xc, xr, threshold, alpha, beta, margin, coarse_cfg=coarse_cfg,
+            resid_cfg=resid_cfg, seg=seg, metric=metric, tile_c=tile_c,
+            interpret=not _on_tpu())
+    return _fold_lane_mask(out, lane_mask)
+
+
 def fee_distance_stale(q, x, exit_threshold, admit_threshold, alpha, beta,
                        margin, *, seg: int, metric: str = "l2",
                        backend: str = "auto", tile_c: int = 128,
@@ -117,7 +145,10 @@ def fee_distance_stale(q, x, exit_threshold, admit_threshold, alpha, beta,
     survived both thresholds (note the *positive* polarity, vs. the
     ``rejected`` flag of :func:`fee_distance`).  With ``dfloat_cfg`` the
     candidates ``x`` are packed uint32 rows scored via
-    :func:`fee_distance_packed`.
+    :func:`fee_distance_packed`; a *tuple* ``dfloat_cfg`` of (coarse,
+    residual) tier configs selects the tiered path (``x`` is then the
+    matching (coarse_rows, residual_rows) pair — both shard-local, so the
+    cross-shard collective never carries residual words).
     """
     import jax.numpy as jnp
 
@@ -125,6 +156,12 @@ def fee_distance_stale(q, x, exit_threshold, admit_threshold, alpha, beta,
         dist, rejected, segs_used = fee_distance(
             q, x, exit_threshold, alpha, beta, margin, seg=seg, metric=metric,
             backend=backend, tile_c=tile_c, lane_mask=lane_mask)
+    elif isinstance(dfloat_cfg, tuple):
+        dist, rejected, segs_used = fee_distance_tiered(
+            q, x[0], x[1], exit_threshold, alpha, beta, margin,
+            coarse_cfg=dfloat_cfg[0], resid_cfg=dfloat_cfg[1], seg=seg,
+            metric=metric, backend=backend, tile_c=tile_c,
+            lane_mask=lane_mask)
     else:
         dist, rejected, segs_used = fee_distance_packed(
             q, x, exit_threshold, alpha, beta, margin, dfloat_cfg=dfloat_cfg,
@@ -144,6 +181,23 @@ def dfloat_unpack_rows(packed, cfg: dfl.DfloatConfig, *,
         return dfl.unpack_rows_jnp(packed, cfg)
     return dfloat_unpack_pallas(packed, cfg, tile_c=tile_c,
                                 interpret=not _on_tpu())
+
+
+def dfloat_unpack_tiered_rows(xc, xr, coarse_cfg: dfl.DfloatConfig,
+                              resid_cfg: dfl.DfloatConfig, *,
+                              backend: str = "auto", tile_c: int = 128):
+    """Decode a (coarse, residual) tier-row pair back to (C, D) f32 —
+    bit-exact vs ``dfloat_unpack_rows`` on the parent layout's rows."""
+    import jax.numpy as jnp
+
+    parts = []
+    if coarse_cfg.dim:
+        parts.append(dfloat_unpack_rows(xc, coarse_cfg, backend=backend,
+                                        tile_c=tile_c))
+    if resid_cfg.dim:
+        parts.append(dfloat_unpack_rows(xr, resid_cfg, backend=backend,
+                                        tile_c=tile_c))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
 
 
 def dfloat_unpack(packed, cfg, *, backend: str = "auto", tile_c: int = 128):

@@ -50,6 +50,31 @@ def fee_distance_packed_ref(q, xp, threshold, alpha, beta, margin, *,
                             seg=seg, metric=metric)
 
 
+def fee_distance_tiered_ref(q, x_coarse, x_resid, threshold, alpha, beta,
+                            margin, *, coarse_cfg: dfl.DfloatConfig,
+                            resid_cfg: dfl.DfloatConfig, seg, metric="l2"):
+    """Oracle for the tiered fused kernel: decode the resident coarse tier and
+    the residual tier independently (each is its own burst-aligned bitstream),
+    concatenate along the feature axis, and run the exact same FEE arithmetic.
+
+    Per-feature formats are preserved by ``dfloat.split_config``, so the
+    concatenated features equal the parent packed row's decode bit for bit —
+    tiered distances / exits / segs_used are bit-identical to
+    :func:`fee_distance_packed_ref` for any split point.  The fetch gating is
+    a *traffic* property (residual words move only for lanes whose
+    ``segs_used`` crosses the tier boundary); the oracle's arithmetic is
+    unconditional.
+    """
+    parts = []
+    if coarse_cfg.dim:
+        parts.append(dfl.unpack_rows_jnp(x_coarse, coarse_cfg))
+    if resid_cfg.dim:
+        parts.append(dfl.unpack_rows_jnp(x_resid, resid_cfg))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return fee_distance_ref(q, x, threshold, alpha, beta, margin,
+                            seg=seg, metric=metric)
+
+
 def dfloat_unpack_ref(packed: np.ndarray, cfg: dfl.DfloatConfig) -> np.ndarray:
     """Oracle for kernels.dfloat_unpack (numpy bit-exact decoder)."""
     return dfl.unpack_db(packed, cfg)

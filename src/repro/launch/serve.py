@@ -35,7 +35,8 @@ def _serve_main(argv):
     ap = argparse.ArgumentParser(description="online ANNS serving driver")
     ap.add_argument("--dataset", default="unit")
     ap.add_argument("--m", type=int, default=8, help="graph degree at build")
-    ap.add_argument("--storage", default="f32", choices=["f32", "packed"])
+    ap.add_argument("--storage", default="f32",
+                    choices=["f32", "packed", "tiered"])
     ap.add_argument("--rps", type=float, default=50.0)
     ap.add_argument("--duration", type=float, default=10.0)
     ap.add_argument("--pattern", default="poisson",
@@ -81,12 +82,13 @@ def _serve_main(argv):
         batch_buckets=tuple(int(x) for x in args.batch_buckets.split(",")),
         k_max=max(k_mix), slo_ms=args.slo_ms,
         storages=(args.storage,),
-        use_dfloat=args.storage == "packed")
+        use_dfloat=args.storage in ("packed", "tiered"))
 
     db = make_dataset(args.dataset)
     spec = IndexSpec.for_db(
         db, m=args.m,
-        dfloat_recall_target=0.80 if args.storage == "packed" else None,
+        dfloat_recall_target=(0.80 if args.storage in ("packed", "tiered")
+                              else None),
         ef_fit=32)
     print(f"building index: {db.n} x {db.dim} (m={args.m}, "
           f"storage={args.storage})", flush=True)
@@ -134,6 +136,11 @@ def _print_summary(s):
               f"p999 {s['p999_ms']:.2f}  (p999/p50 "
               f"{s['p999_ms'] / max(s['p50_ms'], 1e-9):.1f}x)")
     print(f"goodput: {s['goodput_qps']:.1f} qps within SLO {s['slo_ms']} ms")
+    if "residual_fetch_fraction" in s:
+        print("residual fetch fraction (tiered, per ef bucket): "
+              + "  ".join(f"ef{b}: {f:.3f}" for b, f in
+                          sorted(s["residual_fetch_fraction"].items(),
+                                 key=lambda kv: int(kv[0]))))
     if "swaps" in s:
         sw = s["swaps"]
         print(f"hot swaps: {sw['installs']} installs "

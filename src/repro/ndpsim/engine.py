@@ -91,6 +91,14 @@ class SimResult:
     # reduce-before-collective, Cosmos-style).  Bytes per query.
     merge_flat_bytes_per_query: float = 0.0
     merge_tree_bytes_per_query: float = 0.0
+    # varint neighbor-list decoder occupancy: decoder-busy share of the
+    # neighbor-retrieval phase (serial cycles per decoded id vs the dense
+    # 4B-id-per-cycle baseline) — what keeps list_compression timing honest
+    list_decode_occupancy: float = 0.0
+    # tiered storage (far-memory residual channel); None when not tiered
+    survivor_fetch_fraction: float | None = None   # lanes that fetched residual
+    far_bytes_per_query: float = 0.0               # residual bytes over the far link
+    residual_fetches_per_query: float = 0.0
 
     def breakdown(self):
         tot = self.t_neighbor_us + self.t_distance_us + self.t_partial_us
@@ -174,7 +182,8 @@ def tree_merge_bytes(counts, width: int, lane_bytes: int = 8) -> float:
 
 def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
                  hw: NDPConfig, flags: SimFlags, dfloat_cfg: DfloatConfig,
-                 seg: int, name: str = "naszip") -> SimResult:
+                 seg: int, name: str = "naszip",
+                 tier_cfgs: tuple | None = None) -> SimResult:
     traces = _as_trace(traces)
     node = _norm_node(traces["node"])          # (Q, H, E)
     nbrs = np.asarray(traces["nbrs"])          # (Q, H, L)
@@ -245,10 +254,31 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
         [-(-dfloat_cfg.bursts_for_prefix(s * feats_per_seg) // dev)
          for s in range(s_hi + 1)], np.int64)
 
+    # Tiered storage: the coarse tier streams from near DRAM exactly like a
+    # (shorter) packed row; the residual tier rides the far-memory channel —
+    # a lane pays it only when it survives past the last coarse segment
+    # (s_used > n_coarse_seg), so the far link's latency/bandwidth price
+    # multiplies the *survivor* population, not every eval.
+    tiered = tier_cfgs is not None
+    if tiered:
+        ccfg, rcfg = tier_cfgs
+        n_coarse_seg = ccfg.dim // max(seg, 1)
+        coarse_groups = np.array(
+            [-(-ccfg.bursts_for_prefix(min(s, n_coarse_seg) * feats_per_seg)
+               // dev) for s in range(s_hi + 1)], np.int64)
+        resid_groups = np.array(
+            [-(-rcfg.bursts_for_prefix(max(0, s - n_coarse_seg)
+                                       * feats_per_seg) // dev)
+             for s in range(s_hi + 1)], np.int64)
+        far_eff_lat = hw.far_latency_ns / max(1, hw.far_prefetch_depth)
+
     tot_time_ns = 0.0
     t_nb = t_dist = t_part = 0.0
     dram_bytes = 0.0
     merge_flat_bytes = merge_tree_bytes = 0.0
+    decode_ns_total = 0.0
+    far_bytes = 0.0
+    n_eval_lanes = n_resid_fetch = 0
     energy_pj = 0.0
     pf_attempts = np.zeros(hmax)
     pf_hits = np.zeros(hmax)
@@ -307,6 +337,18 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
                             if d_miss:
                                 t += hw.t_row_open_ns + d_miss * t_burst
                                 dram_bytes += d_miss * hw.line_bytes
+                            # id-decoder occupancy: varint pays a serial
+                            # per-id decode (the compression's honest cost);
+                            # dense consumes one 4B id per cycle.  The
+                            # decoder overlaps the line stream — only the
+                            # excess beyond the DRAM time lands on the
+                            # critical path (hits decode from the LNC, so
+                            # the full decode time is exposed).
+                            cyc = (hw.varint_decode_cycles_per_id if varint
+                                   else 1.0)
+                            dec_ns = psz * cyc / hw.vpe_freq_ghz
+                            decode_ns_total += dec_ns
+                            t += max(0.0, dec_ns - d_miss * t_burst)
                             ch_busy[c] += t
                             t_nb += t
                             energy_pj += (nlt_miss + d_miss) * hw.line_bytes * 8 * hw.e_dram_pj_per_bit
@@ -334,8 +376,21 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
                         # tombstoned lane: the sub-channel's resident bitmap
                         # vetoes the stream before the first burst
                         continue
-                    n_grp = int(burst_groups[s_used])      # 64B burst groups
-                    stream = hw.t_row_open_ns + n_grp * t_burst
+                    n_eval_lanes += 1
+                    if tiered:
+                        c_grp = int(coarse_groups[s_used])
+                        r_grp = int(resid_groups[s_used])
+                        n_grp = c_grp + r_grp
+                        stream = hw.t_row_open_ns + c_grp * t_burst
+                        if s_used > n_coarse_seg:
+                            # survivor: the residual words ride the far link
+                            fb = r_grp * hw.burst_bytes
+                            stream += far_eff_lat + fb / hw.far_bw_gbps
+                            far_bytes += fb
+                            n_resid_fetch += 1
+                    else:
+                        n_grp = int(burst_groups[s_used])  # 64B burst groups
+                        stream = hw.t_row_open_ns + n_grp * t_burst
                     compute = s_used * feats_per_seg * t_feat
                     tc = max(stream, compute)
                     cc = int(owner[cid])
@@ -423,6 +478,11 @@ def simulate_ndp(traces, owner: np.ndarray, adj: np.ndarray,
         energy_uj_per_query=energy_pj * 1e-6 / n_q,
         merge_flat_bytes_per_query=merge_flat_bytes / n_q,
         merge_tree_bytes_per_query=merge_tree_bytes / n_q,
+        list_decode_occupancy=decode_ns_total / max(t_nb, 1e-9),
+        survivor_fetch_fraction=(n_resid_fetch / max(n_eval_lanes, 1)
+                                 if tiered else None),
+        far_bytes_per_query=far_bytes / n_q,
+        residual_fetches_per_query=n_resid_fetch / n_q,
     )
 
 

@@ -31,6 +31,18 @@ class NDPConfig:
     lnc_ways_d: int = 8
     line_bytes: int = 64
     cache_hit_ns: float = 0.9
+    # far-memory channel for the residual tier (storage="tiered"): the
+    # coarse tier streams from the sub-channel's near DRAM at full burst
+    # rate; residual words of non-exited lanes arrive over a narrower
+    # expansion link (CXL-class) with a per-fetch latency that a small
+    # prefetch queue amortizes across in-flight survivors
+    far_latency_ns: float = 180.0
+    far_bw_gbps: float = 12.8
+    far_prefetch_depth: int = 4
+    # varint neighbor-list decoder: the LNC front-end decodes sorted-delta
+    # LEB128 ids serially — this many cycles per decoded id, vs the dense
+    # path's one 4B id per cycle line consumption
+    varint_decode_cycles_per_id: float = 2.0
     # host interaction
     host_cmd_ns: float = 120.0       # per-hop command issue (control, Fig. 4a)
     host_merge_base_ns: float = 260.0  # per-hop global merge latency

@@ -29,7 +29,7 @@ def params_for(cfg, ef_bucket: int, expand: int, storage: str) -> SearchParams:
     return SearchParams(ef=ef_bucket, k=cfg.k_max, expand=expand,
                         storage=storage, use_fee=cfg.use_fee,
                         use_dfloat=cfg.use_dfloat
-                        or storage == "packed")
+                        or storage in ("packed", "tiered"))
 
 
 def run_bucketed(snapshot, cfg, queries: np.ndarray, ef_bucket: int,
@@ -48,11 +48,11 @@ def run_bucketed(snapshot, cfg, queries: np.ndarray, ef_bucket: int,
     t0 = time.perf_counter()
     res = run(queries)
     service_s = time.perf_counter() - t0
-    return res.ids[:n], res.dists[:n], res.generation, service_s
+    return res.ids[:n], res.dists[:n], res.generation, service_s, res
 
 
 def resolve_batch(snapshot, cfg, serve: list, ef_bucket: int, degraded: bool,
-                  model=None) -> float:
+                  model=None, resid_metrics=None) -> float:
     """Serve one admitted batch and resolve every request future.
 
     Returns the measured service seconds (also fed back into ``model``)."""
@@ -63,10 +63,17 @@ def resolve_batch(snapshot, cfg, serve: list, ef_bucket: int, degraded: bool,
     queries = np.stack([r.query for r in serve])
     bucket = cfg.batch_bucket(len(serve))
     t_start = time.perf_counter()
-    ids, dists, gen, service_s = run_bucketed(
+    ids, dists, gen, service_s, res = run_bucketed(
         snapshot, cfg, queries, ef_bucket, group[1], group[2], bucket=bucket)
     if model is not None:
         model.observe((ef_bucket,) + group[1:], bucket, service_s)
+    if resid_metrics is not None and res.n_resid is not None:
+        # tiered storage: per-bucket survivor-fetch accounting (padding rows
+        # dropped — they duplicate the last real query's counters)
+        n = len(serve)
+        resid_metrics.record_residual(
+            ef_bucket, float(np.asarray(res.n_eval)[:n].sum()),
+            float(np.asarray(res.n_resid)[:n].sum()))
     now = time.perf_counter()
     for i, r in enumerate(serve):
         total_ms = r.elapsed_ms(now)
@@ -83,7 +90,7 @@ def resolve_batch(snapshot, cfg, serve: list, ef_bucket: int, degraded: bool,
 
 def resolve_batch_safe(snapshot, cfg, serve: list, ef_bucket: int,
                        degraded: bool, model=None, metrics=None,
-                       bisect: bool = True) -> tuple:
+                       bisect: bool = True, resid_metrics=None) -> tuple:
     """``resolve_batch`` with bisection retry; returns ``(n_ok, n_failed)``.
 
     A failing batch is split in half and each half retried independently,
@@ -93,7 +100,8 @@ def resolve_batch_safe(snapshot, cfg, serve: list, ef_bucket: int,
     propagate to the serve loop (where the watchdog takes over).
     """
     try:
-        resolve_batch(snapshot, cfg, serve, ef_bucket, degraded, model=model)
+        resolve_batch(snapshot, cfg, serve, ef_bucket, degraded, model=model,
+                      resid_metrics=resid_metrics)
         return len(serve), 0
     except InjectedCrash:
         raise
@@ -108,10 +116,12 @@ def resolve_batch_safe(snapshot, cfg, serve: list, ef_bucket: int,
         mid = len(serve) // 2
         ok_l, bad_l = resolve_batch_safe(snapshot, cfg, serve[:mid],
                                          ef_bucket, degraded, model=model,
-                                         metrics=metrics, bisect=bisect)
+                                         metrics=metrics, bisect=bisect,
+                                         resid_metrics=resid_metrics)
         ok_r, bad_r = resolve_batch_safe(snapshot, cfg, serve[mid:],
                                          ef_bucket, degraded, model=model,
-                                         metrics=metrics, bisect=bisect)
+                                         metrics=metrics, bisect=bisect,
+                                         resid_metrics=resid_metrics)
         return ok_l + ok_r, bad_l + bad_r
 
 

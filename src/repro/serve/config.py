@@ -70,10 +70,12 @@ class ServeConfig:
                 f"k_max={self.k_max} exceeds the smallest ef bucket "
                 f"({min(self.ef_buckets)}); every program serves k_max ids")
         for st in self.storages:
-            if st not in ("f32", "packed"):
+            if st not in ("f32", "packed", "tiered"):
                 raise ValueError(f"unknown storage {st!r}")
-        if "packed" in self.storages and not self.use_dfloat:
-            raise ValueError('storage "packed" requires use_dfloat=True')
+        for st in ("packed", "tiered"):
+            if st in self.storages and not self.use_dfloat:
+                raise ValueError(
+                    f'storage "{st}" requires use_dfloat=True')
         if self.breaker_threshold < 1:
             raise ValueError("breaker_threshold must be >= 1")
         if self.watchdog_stall_s <= 0 or self.watchdog_poll_s <= 0:

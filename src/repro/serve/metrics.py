@@ -22,6 +22,8 @@ class Metrics:
         self._records: list = []       # (status, degraded, deadline_missed)
         self._swaps: list = []         # UploadStats per install
         self._errors = 0               # futures resolved with an exception
+        self._resid: dict = {}         # ef bucket -> [n_eval, n_resid] sums
+                                       # (tiered storage survivor fetches)
         self._events: dict = {}        # resilience event counters (breaker
                                        # trips, watchdog restarts, rollbacks)
         self.cold_start_ms: float | None = None
@@ -51,6 +53,16 @@ class Metrics:
         with self._lock:
             self._errors += 1
             self._t_last = time.perf_counter()
+
+    def record_residual(self, ef_bucket: int, n_eval: float,
+                        n_resid: float) -> None:
+        """Accumulate tiered-storage fetch counters for one served batch:
+        evaluated lanes vs lanes that survived the coarse tier and pulled
+        residual words.  ``summary()`` reports the per-bucket fraction."""
+        with self._lock:
+            acc = self._resid.setdefault(ef_bucket, [0.0, 0.0])
+            acc[0] += n_eval
+            acc[1] += n_resid
 
     def record_event(self, name: str, n: int = 1) -> None:
         """Count a named resilience event (``breaker_trip``,
@@ -82,6 +94,10 @@ class Metrics:
             )
             if self._events:
                 out["events"] = dict(self._events)
+            if self._resid:
+                out["residual_fetch_fraction"] = {
+                    str(b): round(acc[1] / max(acc[0], 1.0), 4)
+                    for b, acc in sorted(self._resid.items())}
             if len(lat):
                 p50, p99, p999 = np.percentile(lat, [50, 99, 99.9])
                 out.update(p50_ms=float(p50), p99_ms=float(p99),

@@ -219,7 +219,8 @@ class Server:
             try:
                 n_ok, _ = resolve_batch_safe(
                     self.installer.serving, cfg, serve, ef, degraded,
-                    model=self.model, bisect=cfg.bisect_retry)
+                    model=self.model, bisect=cfg.bisect_retry,
+                    resid_metrics=self.metrics)
             except InjectedCrash as e:     # simulated process death: resolve
                 for r in serve:            # in-flight futures, then die (the
                     if not r.future.done():  # watchdog restarts the loop)

@@ -64,8 +64,8 @@ def compile_programs(snapshot, cfg, model=None, dim: int | None = None,
                 compile_s = time.perf_counter() - t
                 if first_response_s is None:
                     first_response_s = time.perf_counter() - t0
-                _, _, _, steady_s = run_bucketed(snapshot, cfg, q, ef,
-                                                 cfg.expand, st)
+                steady_s = run_bucketed(snapshot, cfg, q, ef,
+                                        cfg.expand, st)[3]
                 timings[(ef, cfg.expand, st, b)] = (compile_s, steady_s)
                 if model is not None:
                     model.observe((ef, cfg.expand, st), b, steady_s)

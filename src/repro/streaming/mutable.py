@@ -1,9 +1,10 @@
 """MutableIndex: a live serving shard over an immutable base ``Index``.
 
 Storage model.  All row payloads live in *capacity arrays* — ``db_rot``,
-``db_packed`` and the base adjacency are copied once into arrays with a
-pre-reserved tail (doubling growth), and every append writes its burst-aligned
-packed row in place at the next free slot.  Row ids are stable forever:
+``db_packed`` (plus, for tier-native specs with ``tier_split`` set, the
+coarse/residual tier bitstreams) and the base adjacency are copied once into
+arrays with a pre-reserved tail (doubling growth), and every append writes its
+burst-aligned packed row in place at the next free slot.  Row ids are stable forever:
 deleted slots are never reused, so external references survive churn.
 
 Visibility is controlled entirely by the tombstone bitmap: tail slots beyond
@@ -105,7 +106,14 @@ class MutableIndex:
         self._entry = base.graph.entry
 
         self._n = n
+        # tier-native (spec.tier_split set): the (coarse, residual) capacity
+        # arrays are maintained in lockstep with db_packed so freeze() hands
+        # snapshots tiers without repacking; otherwise Index derives them
+        # lazily per snapshot when storage="tiered" is actually requested
+        self._tier_feat = (None if base.spec.tier_split is None
+                           else base.spec.tier_split * base.spec.seg)
         self._rot = self._packed = self._adj = self._dead = None
+        self._coarse = self._resid = None
         self._grow(max(n + 32, int(n * (1 + reserve))), init=True)
         self._adj_shared = False      # outstanding snapshot references _adj
         self._snapshot: tuple[int, Index] | None = None
@@ -186,6 +194,17 @@ class MutableIndex:
             packed[: self._n] = self._packed[: self._n]
             adj[: self._n] = self._adj[: self._n]
             dead[: self._n] = self._dead[: self._n]
+        if self._tier_feat is not None:
+            ccfg, rcfg = dfl.split_config(self.dfloat_cfg, self._tier_feat)
+            coarse = np.zeros((cap, ccfg.packed_row_bytes() // 4), np.uint32)
+            resid = np.zeros((cap, rcfg.packed_row_bytes() // 4), np.uint32)
+            if init:
+                xc, xr = base.tier_arrays()
+                coarse[: self._n], resid[: self._n] = xc, xr
+            else:
+                coarse[: self._n] = self._coarse[: self._n]
+                resid[: self._n] = self._resid[: self._n]
+            self._coarse, self._resid = coarse, resid
         self._rot, self._packed, self._adj, self._dead = rot, packed, adj, dead
         # fresh arrays are private by construction; outstanding snapshots
         # keep the old ones alive (copy-on-write for free)
@@ -268,6 +287,10 @@ class MutableIndex:
         xr = self.spca.transform(batch)
         self._rot[n0 : n0 + b] = xr
         self._packed[n0 : n0 + b] = dfl.pack_db(xr, self.dfloat_cfg)
+        if self._tier_feat is not None:
+            xc, xres = dfl.pack_tiers(xr, self.dfloat_cfg, self._tier_feat)
+            self._coarse[n0 : n0 + b] = xc
+            self._resid[n0 : n0 + b] = xres
         cand_ids, cand_d = self._candidates(xr)
         self._cow_adj()
         m = self.base.graph.m
@@ -461,7 +484,9 @@ class MutableIndex:
                         timings=timings,
                         tombstone=pack_tombstone(self._dead),
                         generation=self.generation,
-                        n_rows=self._n)
+                        n_rows=self._n,
+                        _tiers=(None if self._tier_feat is None
+                                else (self._coarse, self._resid)))
             self._adj_shared = True
             self._snapshot = (self.generation, idx)
             return idx

@@ -72,7 +72,7 @@ def test_save_load_round_trip(unit_db, unit_index, tmp_path):
 def test_load_rejects_unknown_format(unit_index, tmp_path):
     path = unit_index.save(tmp_path / "idx.naszip")
     spec = path / "spec.json"
-    spec.write_text(spec.read_text().replace('"format_version": 2',
+    spec.write_text(spec.read_text().replace('"format_version": 3',
                                              '"format_version": 99'))
     with pytest.raises(ValueError):
         Index.load(path)

@@ -216,7 +216,7 @@ def test_load_pre_refactor_v1_artifact(unit_db, unit_index, tmp_path):
     path = unit_index.save(tmp_path / "old.naszip")
     spec = path / "spec.json"
     meta = json.loads(spec.read_text())
-    assert meta["format_version"] == 2
+    assert meta["format_version"] == 3
     meta["format_version"] = 1
     spec.write_text(json.dumps(meta, indent=1))
     with np.load(path / "arrays.npz") as z:

@@ -28,8 +28,8 @@ K = 10
 def _direct(idx, q, cfg, ef, k, storage="f32", bucket=None):
     """One-by-one local search replayed through the exact serving program:
     same ef bucket, same k_max width, padded to the same batch bucket."""
-    ids, dists, _, _ = run_bucketed(idx, cfg, q, cfg.ef_bucket(ef),
-                                    cfg.expand, storage, bucket=bucket)
+    ids, dists, *_ = run_bucketed(idx, cfg, q, cfg.ef_bucket(ef),
+                                  cfg.expand, storage, bucket=bucket)
     return ids[:, :k], dists[:, :k]
 
 
@@ -107,22 +107,22 @@ def test_bucket_padding_batch_of_1_vs_32(unit_db, unit_index):
     must not perturb the real lane (bitwise, at any lane position)."""
     cfg = ServeConfig(ef_buckets=(32,), batch_buckets=(32,), k_max=K)
     q = unit_db.queries[:1]
-    ids, dists, _, _ = run_bucketed(unit_index, cfg, q, 32, cfg.expand, "f32")
+    ids, dists, *_ = run_bucketed(unit_index, cfg, q, 32, cfg.expand, "f32")
     assert ids.shape == (1, K) and dists.shape == (1, K)
 
     # same program, 32 real queries: lane 0 must be bit-identical to the
     # padded single — padding cannot consume beam slots or shift results
     full = unit_db.queries[:32]
-    ids_f, dists_f, _, _ = run_bucketed(unit_index, cfg, full, 32,
-                                        cfg.expand, "f32")
+    ids_f, dists_f, *_ = run_bucketed(unit_index, cfg, full, 32,
+                                      cfg.expand, "f32")
     np.testing.assert_array_equal(ids[0], ids_f[0])
     np.testing.assert_array_equal(dists[0], dists_f[0])
 
     # ... at any lane position
     perm = np.concatenate([unit_db.queries[1:18], q,
                            unit_db.queries[18:32]])
-    ids_p, dists_p, _, _ = run_bucketed(unit_index, cfg, perm, 32,
-                                        cfg.expand, "f32")
+    ids_p, dists_p, *_ = run_bucketed(unit_index, cfg, perm, 32,
+                                      cfg.expand, "f32")
     np.testing.assert_array_equal(ids[0], ids_p[17])
     np.testing.assert_array_equal(dists[0], dists_p[17])
 

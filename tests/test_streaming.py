@@ -281,13 +281,13 @@ def test_index_load_guards_delta_segments(unit_db, unit_index, tmp_path):
     with pytest.raises(ValueError, match="delta segment"):
         Index.load(path / "delta" / "step_0")
     spec = path / "spec.json"
-    spec.write_text(spec.read_text().replace('"format_version": 2',
-                                             '"format_version": 3'))
-    with pytest.raises(ValueError, match="v3"):
-        Index.load(path)
     spec.write_text(spec.read_text().replace('"format_version": 3',
+                                             '"format_version": 4'))
+    with pytest.raises(ValueError, match="v4"):
+        Index.load(path)
+    spec.write_text(spec.read_text().replace('"format_version": 4',
                                              '"format_version": 99'))
-    with pytest.raises(ValueError, match="formats \\(1, 2\\)"):
+    with pytest.raises(ValueError, match="formats \\(1, 2, 3\\)"):
         Index.load(path)
     with pytest.raises(ValueError, match="spec.json"):
         Index.load(tmp_path / "nowhere")
