@@ -387,6 +387,14 @@ def _serving_row(idx, db, params: SearchParams, storage: str) -> dict:
             row[key] = round(s[key], 3) if isinstance(s[key], float) else s[key]
     if "p999_ms" in s:
         row["p999_over_p50"] = round(s["p999_ms"] / max(s["p50_ms"], 1e-9), 2)
+    if s.get("stages"):
+        # per-stage tail breakdown (queue wait / device exec / resolve) from
+        # the bounded stage sketches — same keys the tracing timeline uses
+        row["stages"] = {k: dict(p50_ms=round(v["p50_ms"], 3),
+                                 p99_ms=round(v["p99_ms"], 3))
+                         for k, v in s["stages"].items()}
+    if "fee_exit_fraction" in s:
+        row["fee_exit_fraction"] = s["fee_exit_fraction"]
     if "swaps" in s:
         sw = s["swaps"]
         row["swaps"] = dict(

@@ -1,0 +1,167 @@
+"""Perf-regression gate: diff a fresh BENCH_search.json against a baseline.
+
+  python benchmarks/check_regression.py \
+      --baseline BENCH_search.json --current /tmp/bench/BENCH_search.json \
+      [--report regression_report.json]
+
+Compares the per-row headline metrics (qps, recall, latency tails, bytes per
+query, serving goodput) with per-metric thresholds:
+
+  * a **soft** threshold — drift worth a warning line in the CI log;
+  * a **hard** threshold — a regression that fails the gate (exit 1).
+
+Comparisons are only meaningful when both files measured the same thing, so
+the *context* keys (dataset, n_vectors, dim, storage, fast_mode, machine) are
+checked first: any mismatch drops the run to **soft mode** — every finding is
+reported as drift, nothing fails — because e.g. the committed baseline is a
+full sift run while CI benches the tiny unit dataset on whatever runner it
+got.  CI separately self-tests the gate with a synthetic 20% qps drop (same
+context), which must exit non-zero.
+
+Exit codes: 0 = ok / soft drift only / context mismatch, 1 = hard
+regression, 2 = unusable input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# context keys that must match for the comparison to be apples-to-apples
+CONTEXT_KEYS = ("dataset", "n_vectors", "dim", "storage", "fast_mode")
+
+# (row, metric, direction, soft, hard, unit)
+#   direction "higher": regression = relative drop vs baseline
+#   direction "lower":  regression = relative rise vs baseline
+#   direction "higher_abs": regression = absolute drop (recall points)
+THRESHOLDS = [
+    ("baseline",        "qps",            "higher",     0.05, 0.10, "rel"),
+    ("baseline",        "recall_at_10",   "higher_abs", 0.002, 0.005, "pt"),
+    ("baseline",        "p99_latency_ms", "lower",      0.10, 0.25, "rel"),
+    ("multi_expansion", "qps",            "higher",     0.05, 0.10, "rel"),
+    ("multi_expansion", "recall_at_10",   "higher_abs", 0.002, 0.005, "pt"),
+    ("multi_expansion", "p99_latency_ms", "lower",      0.10, 0.25, "rel"),
+    ("packed_storage",  "qps",            "higher",     0.05, 0.10, "rel"),
+    ("packed_storage",  "recall_at_10",   "higher_abs", 0.002, 0.005, "pt"),
+    ("tiered_storage",  "qps",            "higher",     0.05, 0.10, "rel"),
+    ("tiered_storage",  "recall_at_10",   "higher_abs", 0.002, 0.005, "pt"),
+    ("tiered_storage",  "bytes_per_query", "lower",     0.05, 0.10, "rel"),
+    ("sharded",         "qps",            "higher",     0.05, 0.10, "rel"),
+    ("sharded",         "recall_at_10",   "higher_abs", 0.002, 0.005, "pt"),
+    ("ndpsim",          "qps",            "higher",     0.05, 0.10, "rel"),
+    ("ndpsim",          "dram_bytes_per_query", "lower", 0.05, 0.10, "rel"),
+    ("serving",         "goodput_qps",    "higher",     0.10, 0.20, "rel"),
+    ("serving",         "p99_ms",         "lower",      0.15, 0.30, "rel"),
+]
+
+
+def _load(path: str) -> dict:
+    try:
+        return json.loads(Path(path).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_regression: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def context_mismatches(base: dict, cur: dict) -> list[str]:
+    out = []
+    for k in CONTEXT_KEYS:
+        if base.get(k) != cur.get(k):
+            out.append(f"{k}: baseline={base.get(k)!r} current={cur.get(k)!r}")
+    bm = (base.get("platform") or {}).get("machine")
+    cm = (cur.get("platform") or {}).get("machine")
+    if bm != cm:
+        out.append(f"platform.machine: baseline={bm!r} current={cm!r}")
+    return out
+
+
+def compare(base: dict, cur: dict) -> list[dict]:
+    """One finding per threshold row where both sides carry the metric."""
+    findings = []
+    for row, metric, direction, soft, hard, unit in THRESHOLDS:
+        b = (base.get(row) or {}).get(metric)
+        c = (cur.get(row) or {}).get(metric)
+        if b is None or c is None:
+            continue
+        b, c = float(b), float(c)
+        if direction == "higher":
+            delta = (b - c) / max(abs(b), 1e-12)        # fraction dropped
+            desc = f"{delta:+.1%} drop"
+        elif direction == "lower":
+            delta = (c - b) / max(abs(b), 1e-12)        # fraction risen
+            desc = f"{delta:+.1%} rise"
+        else:                                           # higher_abs (points)
+            delta = b - c
+            desc = f"{delta:+.4f} pt drop"
+        level = ("hard" if delta > hard else
+                 "soft" if delta > soft else "ok")
+        findings.append(dict(row=row, metric=metric, baseline=b, current=c,
+                             delta=round(delta, 6), desc=desc, level=level,
+                             soft_threshold=soft, hard_threshold=hard,
+                             unit=unit))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_search.json")
+    ap.add_argument("--current", required=True,
+                    help="freshly produced BENCH_search.json to check")
+    ap.add_argument("--report", default=None,
+                    help="write the full findings JSON here (CI artifact)")
+    ap.add_argument("--soft-only", action="store_true",
+                    help="never fail — report everything as drift")
+    args = ap.parse_args(argv)
+
+    base, cur = _load(args.baseline), _load(args.current)
+    mismatches = context_mismatches(base, cur)
+    soft_mode = args.soft_only or bool(mismatches)
+    if mismatches:
+        print("context mismatch — comparison is not apples-to-apples, "
+              "running in soft (warn-only) mode:")
+        for m in mismatches:
+            print(f"  ! {m}")
+
+    findings = compare(base, cur)
+    if not findings:
+        print("check_regression: no comparable metrics found", file=sys.stderr)
+        return 2
+
+    n_hard = n_soft = 0
+    for f in findings:
+        tag = {"ok": "  ok ", "soft": " DRIFT", "hard": "REGRESS"}[f["level"]]
+        if soft_mode and f["level"] == "hard":
+            tag = " DRIFT"
+        print(f"[{tag}] {f['row']}.{f['metric']}: "
+              f"{f['baseline']:g} -> {f['current']:g} ({f['desc']}; "
+              f"soft>{f['soft_threshold']:g}, hard>{f['hard_threshold']:g})")
+        if f["level"] == "hard":
+            n_hard += 1
+        elif f["level"] == "soft":
+            n_soft += 1
+
+    verdict = dict(
+        baseline=args.baseline, current=args.current,
+        context_mismatches=mismatches, soft_mode=soft_mode,
+        n_compared=len(findings), n_soft=n_soft, n_hard=n_hard,
+        failed=bool(n_hard and not soft_mode), findings=findings)
+    if args.report:
+        Path(args.report).write_text(json.dumps(verdict, indent=1))
+        print(f"report -> {args.report}")
+
+    if n_hard and not soft_mode:
+        print(f"check_regression: FAILED — {n_hard} hard regression(s)")
+        return 1
+    if n_hard and soft_mode:
+        print(f"check_regression: {n_hard} would-be regression(s) reported "
+              "as drift (soft mode)")
+    elif n_soft:
+        print(f"check_regression: {n_soft} soft drift(s), no hard regression")
+    else:
+        print("check_regression: no regression")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -369,40 +369,36 @@ def _search_batch(vectors, adj, fee, tombstone, queries, entries, *,
     n_rows = (vectors[0] if tiered else vectors).shape[0]
     n_words = -(-n_rows // 32)
 
+    # hop counters carried through the early-terminating fast path for every
+    # storage (cheap: one int32 add per hop) — serving reports the live FEE
+    # exit fraction and, for tiered, the survivor-fetch fraction without
+    # paying for a full trace
+    cnt_keys = ("n_eval", "dims", "n_resid") if tiered else ("n_eval", "dims")
+
     def search_one(q, entry):
         state = _init_state(q, entry, vectors, cfg, n_words, dfl_cfg)
-        if tiered:
-            # (evaluated lanes, residual-tier fetches) — cheap enough to
-            # carry through the fast path too, so serving can report the
-            # survivor-fetch fraction without a full trace
-            state = (state, jnp.zeros((2,), jnp.int32))
         counters = None
         if trace:
             def step(s, _):
-                s, t = _hop_body(s[0] if tiered else s, vectors, adj, q, fee,
-                                 cfg, dfl_cfg, tombstone)
-                if tiered:
-                    s = (s, jnp.zeros((2,), jnp.int32))
-                return s, t
+                return _hop_body(s, vectors, adj, q, fee, cfg, dfl_cfg,
+                                 tombstone)
             state, traces = jax.lax.scan(step, state, None, length=cfg.hops())
         else:
+            # last accumulator slot counts hops (same definition as the
+            # trace path: a hop where at least one node was popped)
+            state = (state, jnp.zeros((len(cnt_keys) + 1,), jnp.int32))
             def cond(s):
-                _, beam_d, expanded, _ = s[0] if tiered else s
+                _, beam_d, expanded, _ = s[0]
                 return ((~expanded) & (beam_d < BIG)).any()
             def body(s):
-                if tiered:
-                    core, cnt = s
-                    core, t = _hop_body(core, vectors, adj, q, fee, cfg,
-                                        dfl_cfg, tombstone)
-                    return (core, cnt + jnp.stack([t["n_eval"],
-                                                   t["n_resid"]]))
-                s, _ = _hop_body(s, vectors, adj, q, fee, cfg, dfl_cfg,
-                                 tombstone)
-                return s
-            state = jax.lax.while_loop(cond, body, state)
+                core, cnt = s
+                core, t = _hop_body(core, vectors, adj, q, fee, cfg,
+                                    dfl_cfg, tombstone)
+                per_hop = [t[k] for k in cnt_keys] \
+                    + [(t["node"] >= 0).any().astype(jnp.int32)]
+                return (core, cnt + jnp.stack(per_hop))
+            state, counters = jax.lax.while_loop(cond, body, state)
             traces = None
-        if tiered:
-            state, counters = state
         beam_ids, beam_d, _, _ = state
         if tombstone is not None:
             beam_ids, beam_d = exclude_dead(beam_ids, beam_d, tombstone)
@@ -414,8 +410,10 @@ def _search_batch(vectors, adj, fee, tombstone, queries, entries, *,
             out["dims"] = traces["dims"].sum()
             if tiered:
                 out["n_resid"] = traces["n_resid"].sum()
-        elif tiered:
-            out["n_eval"], out["n_resid"] = counters[0], counters[1]
+        else:
+            for i, k in enumerate(cnt_keys):
+                out[k] = counters[i]
+            out["hops"] = counters[-1]
         return out
 
     return jax.vmap(search_one)(queries, entries)

@@ -38,6 +38,30 @@ from repro.core import graph as gmod
 from repro.core import search as search_mod
 from repro.core.fee import FeeParams
 from repro.index.types import SearchParams, SearchResult
+from repro.obs import default_registry
+
+
+def _record_search(res: SearchResult, dim: int, bytes_per_dim: float) -> None:
+    """Feed one batch's :class:`SearchResult` counters into the process-wide
+    telemetry registry (``repro.obs.default_registry``): queries served, hops,
+    lanes evaluated, feature dims touched vs touchable (the FEE exit fraction
+    is derivable as ``1 - dims_touched/dims_possible``), residual-tier fetches
+    and approximate payload bytes streamed from the base-vector store."""
+    reg = default_registry()
+    reg.counter("search.queries").inc(len(res.ids))
+    if res.hops is not None:
+        reg.counter("search.hops").inc(float(np.sum(res.hops)))
+    if res.n_eval is not None:
+        reg.counter("search.lanes_evaluated").inc(float(np.sum(res.n_eval)))
+    if res.dims is not None:
+        dims = float(np.sum(res.dims))
+        reg.counter("search.dims_touched").inc(dims)
+        reg.counter("search.payload_bytes").inc(dims * bytes_per_dim)
+        if res.n_eval is not None:
+            reg.counter("search.dims_possible").inc(
+                float(np.sum(res.n_eval)) * dim)
+    if res.n_resid is not None:
+        reg.counter("search.residual_fetches").inc(float(np.sum(res.n_resid)))
 
 BACKENDS = ("local", "sharded", "ndpsim")
 
@@ -112,12 +136,24 @@ def local_searcher(index, params: SearchParams, *, fee=None):
         tombstone=index.device_tombstone())
     rows = _descent_rows(index, params)
 
+    # bytes actually streamed per feature dim under this storage mode: the
+    # packed/tiered bitstream moves total_bits/dim bits, dense f32 moves 4 B
+    dcfg = _dfloat_cfg(index, params)
+    if params.storage == "tiered":
+        bits = sum(c.total_bits() for c in dcfg)
+        bpd = bits / 8.0 / max(sum(c.dim for c in dcfg), 1)
+    elif params.storage == "packed":
+        bpd = dcfg.total_bits() / 8.0 / max(dcfg.dim, 1)
+    else:
+        bpd = 4.0
+
     def run(queries) -> SearchResult:
         qr = index.transform_queries(np.asarray(queries))
         entries = search_mod.descend_entry(rows, index.graph, qr, index.metric)
         res = SearchResult.from_raw(searcher(jnp.asarray(qr),
                                              jnp.asarray(entries)))
         res.generation = index.generation
+        _record_search(res, index.dim, bpd)
         return res
 
     return run

@@ -35,11 +35,14 @@ def _phase_a(idx, db, args, report, event_log):
     """Serve under faults: poison, breaker window, stall, crash, bad swap."""
     import numpy as np
 
+    from repro import obs
     from repro.resilience import FaultPlan, FaultSpec, active_plan
     from repro.serve import ServeConfig, Server
     from repro.streaming import MutableIndex
 
     print("[A] serve-under-faults", flush=True)
+    obs.enable_tracing()
+    obs.tracer.clear()
     rng = np.random.default_rng(args.seed)
     mi = MutableIndex(idx, reserve=0.5)
     cfg = ServeConfig(
@@ -94,6 +97,19 @@ def _phase_a(idx, db, args, report, event_log):
                     st = f.result().status
                     statuses[st] = statuses.get(st, 0) + 1
         summary = srv.metrics.summary()
+        registry_snapshot = srv.metrics.registry.snapshot()
+    obs.disable_tracing()
+
+    # span timeline around each injected fault (+/- 50 ms window): shows
+    # what the serving pipeline was doing when the fault fired — e.g. the
+    # requests in flight around a watchdog restart or a failed install
+    fault_timelines = []
+    for e in plan.events:
+        spans = obs.tracer.window(e.t - 0.05, e.t + 0.05)
+        fault_timelines.append(dict(
+            point=e.point, kind=e.kind, hit=e.hit,
+            n_spans=len(spans),
+            spans=[s.to_dict() for s in spans[:40]]))
 
     # zero acked appends lost: reload the WAL strict and count rows
     from repro.streaming import MutableIndex as MI
@@ -110,7 +126,13 @@ def _phase_a(idx, db, args, report, event_log):
         watchdog_restarts=(ev.get("watchdog_restart_dead", 0)
                            + ev.get("watchdog_restart_stalled", 0)),
         swap_rollbacks=ev.get("swap_rollback", 0),
-        errors_metric=summary["errors"])
+        errors_metric=summary["errors"],
+        errors_by_type=summary.get("errors_by_type", {}),
+        registry=registry_snapshot,
+        resilience_counters={
+            k: v for k, v in obs.default_registry().snapshot().items()
+            if k.startswith("resilience.")},
+        fault_timelines=fault_timelines)
     event_log.extend(dict(phase="A", **e) for e in plan.log())
     print(f"    {len(futs)} submitted, {unresolved} unresolved, "
           f"{n_errored} errored ({n_poisoned} poisoned), {statuses}",

@@ -55,6 +55,14 @@ def _serve_main(argv):
     ap.add_argument("--cache-dir", default=None,
                     help="persistent jit compilation cache (warm start)")
     ap.add_argument("--report", default=None, help="write JSON report here")
+    ap.add_argument("--trace", action="store_true",
+                    help="record request spans (bounded ring buffer)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the Chrome-trace timeline artifact here "
+                         "(implies --trace; load in chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="periodically write a JSON registry snapshot here "
+                         "(serve + process-wide counters)")
     ap.add_argument("--check-no-failures", action="store_true",
                     help="exit 1 on any shed/timeout response")
     ap.add_argument("--check-p99-ms", type=float, default=None,
@@ -104,7 +112,17 @@ def _serve_main(argv):
         if n_del:
             mi.delete(rng.integers(0, db.n, n_del))
 
+    from repro import obs
+
+    if args.trace or args.trace_out:
+        obs.enable_tracing()
+    exporter = None
     with Server(mi if mi is not None else idx, cfg) as srv:
+        if args.metrics_out:
+            exporter = obs.PeriodicExporter(
+                {"serve": srv.metrics.registry,
+                 "default": obs.default_registry()},
+                args.metrics_out).start()
         print(f"serving: cold start {srv.metrics.cold_start_ms:.0f} ms, "
               f"{len(srv.warmup_info['cells'])} programs compiled", flush=True)
         run_load(srv, db.queries, rps=args.rps, duration_s=args.duration,
@@ -114,6 +132,14 @@ def _serve_main(argv):
                  mutate_every_s=args.mutate_every_s)
         summary = srv.metrics.summary()
         hist = srv.metrics.histogram()
+    if exporter is not None:
+        exporter.stop()
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        n_spans = len(obs.tracer.spans())
+        obs.tracer.write_chrome_trace(args.trace_out)
+        print(f"trace ({n_spans} spans, {obs.tracer.dropped} dropped) -> "
+              f"{args.trace_out}")
 
     _print_summary(summary)
     if args.report:
@@ -135,6 +161,12 @@ def _print_summary(s):
         print(f"latency ms: p50 {s['p50_ms']:.2f}  p99 {s['p99_ms']:.2f}  "
               f"p999 {s['p999_ms']:.2f}  (p999/p50 "
               f"{s['p999_ms'] / max(s['p50_ms'], 1e-9):.1f}x)")
+    if s.get("stages"):
+        print("per-stage ms: " + "  ".join(
+            f"{k} p50 {v['p50_ms']:.2f} / p99 {v['p99_ms']:.2f}"
+            for k, v in s["stages"].items()))
+    if "fee_exit_fraction" in s:
+        print(f"FEE exit fraction: {s['fee_exit_fraction']:.3f}")
     print(f"goodput: {s['goodput_qps']:.1f} qps within SLO {s['slo_ms']} ms")
     if "residual_fetch_fraction" in s:
         print("residual fetch fraction (tiered, per ef bucket): "

@@ -145,6 +145,11 @@ class FaultPlan:
     def _record(self, point: str, hit: int, kind: str, detail: str = ""):
         ev = FaultEvent(point=point, hit=hit, kind=kind, detail=detail)
         self.events.append(ev)
+        # every fire also lands in the process-wide telemetry registry, so a
+        # chaos report can cross-check its event log against live counters
+        from repro.obs import default_registry
+
+        default_registry().counter(f"resilience.faults.{kind}").inc()
         return ev
 
     # -- firing decision -----------------------------------------------------

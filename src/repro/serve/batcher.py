@@ -14,6 +14,13 @@ batch fails, the two halves are retried independently, recursively, until the
 failure is pinned to single requests — so one poisoned query fails exactly
 one future instead of taking its 31 batchmates down with it.  Padding makes
 a half-batch run the same program lattice, just at a smaller batch bucket.
+
+Tracing: ``resolve_batch`` stamps the stage boundaries of every batch
+(``time.perf_counter_ns`` — a handful of clock reads per *batch*, not per
+request) and, when the process tracer is enabled, emits one span per request
+per stage: ``queue_wait -> admission -> bucket_pad -> device_exec ->
+topk_slice -> resolve``.  The span construction itself is guarded behind
+``tracer.enabled``, so the disabled hot path allocates nothing.
 """
 from __future__ import annotations
 
@@ -22,6 +29,7 @@ import time
 import numpy as np
 
 from repro.index import SearchParams
+from repro.obs import tracer
 from repro.resilience import InjectedCrash, fault_point
 
 
@@ -33,11 +41,14 @@ def params_for(cfg, ef_bucket: int, expand: int, storage: str) -> SearchParams:
 
 
 def run_bucketed(snapshot, cfg, queries: np.ndarray, ef_bucket: int,
-                 expand: int, storage: str, bucket: int | None = None):
+                 expand: int, storage: str, bucket: int | None = None,
+                 timings: dict | None = None):
     """Run ``queries`` through the (ef_bucket, expand, storage) program at the
     padded batch bucket; returns ``(ids, dists, generation, service_s)`` with
     the padding rows already dropped.  ``bucket`` pins the batch bucket (a
-    test replaying one request against the exact program that served it)."""
+    test replaying one request against the exact program that served it).
+    ``timings`` (optional dict) receives the ``t_exec_ns``/``t_done_ns``
+    stage boundaries so the caller can attribute pad vs device time."""
     n = len(queries)
     bucket = bucket or cfg.batch_bucket(n)
     if n < bucket:
@@ -45,52 +56,102 @@ def run_bucketed(snapshot, cfg, queries: np.ndarray, ef_bucket: int,
         queries = np.concatenate([queries, pad], axis=0)
     run = snapshot.searcher("local", params_for(cfg, ef_bucket, expand,
                                                 storage))
-    t0 = time.perf_counter()
+    t0_ns = time.perf_counter_ns()
     res = run(queries)
-    service_s = time.perf_counter() - t0
-    return res.ids[:n], res.dists[:n], res.generation, service_s, res
+    t1_ns = time.perf_counter_ns()
+    if timings is not None:
+        timings["t_exec_ns"] = t0_ns
+        timings["t_done_ns"] = t1_ns
+    return res.ids[:n], res.dists[:n], res.generation, (t1_ns - t0_ns) / 1e9, res
 
 
 def resolve_batch(snapshot, cfg, serve: list, ef_bucket: int, degraded: bool,
-                  model=None, resid_metrics=None) -> float:
+                  model=None, resid_metrics=None, t_taken_ns: int | None = None,
+                  t_admitted_ns: int | None = None) -> float:
     """Serve one admitted batch and resolve every request future.
 
-    Returns the measured service seconds (also fed back into ``model``)."""
+    Returns the measured service seconds (also fed back into ``model``).
+    ``t_taken_ns``/``t_admitted_ns`` are the batch-formation and admission
+    boundaries stamped by the serve loop; they split each request's latency
+    into the traced stages (absent — a direct call — both collapse onto the
+    execution start, attributing everything before it to queue wait)."""
     from repro.serve.request import Response
 
     fault_point("serve.batch_exec", ids=[r.id for r in serve])
     group = serve[0].group(cfg)
+    t_pad_ns = time.perf_counter_ns()
     queries = np.stack([r.query for r in serve])
     bucket = cfg.batch_bucket(len(serve))
-    t_start = time.perf_counter()
+    timings = {}
     ids, dists, gen, service_s, res = run_bucketed(
-        snapshot, cfg, queries, ef_bucket, group[1], group[2], bucket=bucket)
+        snapshot, cfg, queries, ef_bucket, group[1], group[2], bucket=bucket,
+        timings=timings)
+    t_exec_ns, t_done_ns = timings["t_exec_ns"], timings["t_done_ns"]
     if model is not None:
         model.observe((ef_bucket,) + group[1:], bucket, service_s)
-    if resid_metrics is not None and res.n_resid is not None:
-        # tiered storage: per-bucket survivor-fetch accounting (padding rows
-        # dropped — they duplicate the last real query's counters)
-        n = len(serve)
-        resid_metrics.record_residual(
-            ef_bucket, float(np.asarray(res.n_eval)[:n].sum()),
-            float(np.asarray(res.n_resid)[:n].sum()))
-    now = time.perf_counter()
-    for i, r in enumerate(serve):
-        total_ms = r.elapsed_ms(now)
-        r.future.set_result(Response(
-            id=r.id, status="ok",
-            ids=np.asarray(ids[i, :r.k]), dists=np.asarray(dists[i, :r.k]),
-            generation=gen, ef_served=ef_bucket, batch_bucket=bucket,
-            degraded=degraded and ef_bucket < r.group(cfg)[0],
-            queue_ms=(t_start - r.t_submit) * 1e3,
-            service_ms=service_s * 1e3, total_ms=total_ms,
-            deadline_missed=total_ms > r.deadline_ms))
+    n = len(serve)
+    if resid_metrics is not None and res.n_eval is not None:
+        # live search counters (padding rows dropped — they duplicate the
+        # last real query's counters): FEE exit fraction for every storage,
+        # plus tiered per-bucket survivor-fetch accounting
+        n_eval = float(np.asarray(res.n_eval)[:n].sum())
+        dim = getattr(snapshot, "dim", None)
+        if res.dims is not None and dim:
+            resid_metrics.record_batch(
+                n_eval, float(np.asarray(res.dims)[:n].sum()), dim)
+        if res.n_resid is not None:
+            resid_metrics.record_residual(
+                ef_bucket, n_eval, float(np.asarray(res.n_resid)[:n].sum()))
+    # per-request top-k slices first, then response construction (the resolve
+    # stage), so the stage boundaries are real shared timestamps rather than
+    # interleaved per-request work.  ``total_ms`` is stamped when the resolve
+    # stage *ends* — the traced stage durations sum to it exactly — while the
+    # future propagation (done-callbacks, metrics) stays outside both.
+    slices = [(np.asarray(ids[i, : r.k]), np.asarray(dists[i, : r.k]))
+              for i, r in enumerate(serve)]
+    t_slice_ns = time.perf_counter_ns()
+    responses = [Response(
+        id=r.id, status="ok", ids=ids_i, dists=dists_i,
+        generation=gen, ef_served=ef_bucket, batch_bucket=bucket,
+        degraded=degraded and ef_bucket < r.group(cfg)[0],
+        queue_ms=(t_exec_ns / 1e9 - _NS_EPOCH - r.t_submit) * 1e3,
+        service_ms=service_s * 1e3)
+        for (ids_i, dists_i), r in zip(slices, serve)]
+    t_res_ns = time.perf_counter_ns()
+    now = t_res_ns / 1e9 - _NS_EPOCH
+    for resp, r in zip(responses, serve):
+        resp.total_ms = r.elapsed_ms(now)
+        resp.deadline_missed = resp.total_ms > r.deadline_ms
+        r.future.set_result(resp)
+    if tracer.enabled:
+        taken = t_taken_ns if t_taken_ns is not None else t_pad_ns
+        admitted = t_admitted_ns if t_admitted_ns is not None else t_pad_ns
+        for r in serve:
+            sub_ns = int((r.t_submit + _NS_EPOCH) * 1e9)
+            rid = r.id
+            tracer.add_span("queue_wait", sub_ns, taken, req=rid)
+            tracer.add_span("admission", taken, admitted, req=rid, depth=0)
+            tracer.add_span("bucket_pad", admitted, t_exec_ns, req=rid,
+                            bucket=bucket, n=n)
+            tracer.add_span("device_exec", t_exec_ns, t_done_ns, req=rid,
+                            ef=ef_bucket, storage=group[2])
+            tracer.add_span("topk_slice", t_done_ns, t_slice_ns, req=rid)
+            tracer.add_span("resolve", t_slice_ns, t_res_ns, req=rid)
     return service_s
+
+
+# time.perf_counter() and time.perf_counter_ns() share one monotonic clock;
+# this offset (seconds) converts between the float timestamps requests carry
+# (Request.t_submit) and the ns stamps the tracer records.  Measured once —
+# the two calls are back-to-back, so the offset error is sub-microsecond.
+_NS_EPOCH = (lambda: (time.perf_counter_ns() / 1e9) - time.perf_counter())()
 
 
 def resolve_batch_safe(snapshot, cfg, serve: list, ef_bucket: int,
                        degraded: bool, model=None, metrics=None,
-                       bisect: bool = True, resid_metrics=None) -> tuple:
+                       bisect: bool = True, resid_metrics=None,
+                       t_taken_ns: int | None = None,
+                       t_admitted_ns: int | None = None) -> tuple:
     """``resolve_batch`` with bisection retry; returns ``(n_ok, n_failed)``.
 
     A failing batch is split in half and each half retried independently,
@@ -101,7 +162,8 @@ def resolve_batch_safe(snapshot, cfg, serve: list, ef_bucket: int,
     """
     try:
         resolve_batch(snapshot, cfg, serve, ef_bucket, degraded, model=model,
-                      resid_metrics=resid_metrics)
+                      resid_metrics=resid_metrics, t_taken_ns=t_taken_ns,
+                      t_admitted_ns=t_admitted_ns)
         return len(serve), 0
     except InjectedCrash:
         raise
@@ -117,11 +179,15 @@ def resolve_batch_safe(snapshot, cfg, serve: list, ef_bucket: int,
         ok_l, bad_l = resolve_batch_safe(snapshot, cfg, serve[:mid],
                                          ef_bucket, degraded, model=model,
                                          metrics=metrics, bisect=bisect,
-                                         resid_metrics=resid_metrics)
+                                         resid_metrics=resid_metrics,
+                                         t_taken_ns=t_taken_ns,
+                                         t_admitted_ns=t_admitted_ns)
         ok_r, bad_r = resolve_batch_safe(snapshot, cfg, serve[mid:],
                                          ef_bucket, degraded, model=model,
                                          metrics=metrics, bisect=bisect,
-                                         resid_metrics=resid_metrics)
+                                         resid_metrics=resid_metrics,
+                                         t_taken_ns=t_taken_ns,
+                                         t_admitted_ns=t_admitted_ns)
         return ok_l + ok_r, bad_l + bad_r
 
 

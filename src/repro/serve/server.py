@@ -35,6 +35,7 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.obs import tracer
 from repro.resilience import InjectedCrash, fault_point
 from repro.serve.admission import AdmissionController, LatencyModel
 from repro.serve.batcher import fail_timeouts, resolve_batch_safe
@@ -199,6 +200,7 @@ class Server:
                                           linger=cfg.max_wait_ms / 1e3)
             if not batch:
                 continue
+            t_taken_ns = time.perf_counter_ns()
             if not breaker.allow():
                 # open breaker: shed without any device work — failing fast
                 # beats burning every request's deadline on a broken backend
@@ -213,6 +215,7 @@ class Server:
                 continue
             serve, timed_out, ef, degraded = self.admission.plan(
                 batch, len(self.queue))
+            t_admitted_ns = time.perf_counter_ns()
             fail_timeouts(timed_out)
             if not serve:
                 continue
@@ -220,7 +223,8 @@ class Server:
                 n_ok, _ = resolve_batch_safe(
                     self.installer.serving, cfg, serve, ef, degraded,
                     model=self.model, bisect=cfg.bisect_retry,
-                    resid_metrics=self.metrics)
+                    resid_metrics=self.metrics, t_taken_ns=t_taken_ns,
+                    t_admitted_ns=t_admitted_ns)
             except InjectedCrash as e:     # simulated process death: resolve
                 for r in serve:            # in-flight futures, then die (the
                     if not r.future.done():  # watchdog restarts the loop)
@@ -240,9 +244,12 @@ class Server:
                 continue
             if not t.is_alive():
                 self.metrics.record_event("watchdog_restart_dead")
+                tracer.instant("watchdog.restart_dead", epoch=self._epoch)
                 self._spawn_batcher()
             elif stale > cfg.watchdog_stall_s:
                 # wedged mid-batch: abandon it (it exits on epoch mismatch
                 # when it wakes) and serve from the last good generation
                 self.metrics.record_event("watchdog_restart_stalled")
+                tracer.instant("watchdog.restart_stalled", epoch=self._epoch,
+                               stale_s=round(stale, 3))
                 self._spawn_batcher()

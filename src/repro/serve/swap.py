@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import threading
 
+from repro.obs import tracer
 from repro.resilience import InjectedCrash, fault_point
 
 
@@ -110,7 +111,8 @@ class GenerationInstaller:
 
         Returns the per-cache :class:`UploadStats` list, or ``None`` when the
         install failed and was rolled back to the previous generation."""
-        with self._install_lock:
+        with self._install_lock, tracer.span(
+                "swap.install", generation=snapshot.generation):
             prev = self.serving
             try:
                 fault_point("serve.swap.install",
@@ -119,6 +121,8 @@ class GenerationInstaller:
             except InjectedCrash:
                 raise
             except Exception:
+                tracer.instant("swap.rollback",
+                               generation=snapshot.generation)
                 self._rollback(snapshot, prev)
                 return None
             self.serving = snapshot

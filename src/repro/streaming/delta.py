@@ -37,6 +37,7 @@ from pathlib import Path
 
 import numpy as np
 
+from repro import obs
 from repro.ft import checkpoint as ckpt
 from repro.index.index import DELTA_FORMAT_VERSION, KNOWN_FORMATS
 from repro.resilience import CorruptArtifactError
@@ -118,14 +119,17 @@ def save_delta(mindex, path: str | Path) -> Path:
         seq = mindex._delta_seq
     ops = {_op_key(i, kind): np.asarray(arr)
            for i, (kind, arr) in enumerate(mindex._wal)}
-    ckpt.save(delta_dir / f"step_{seq}", step=seq, tree=ops,
-              metadata=dict(format_version=DELTA_FORMAT_VERSION,
-                            kind=SEGMENT_KIND, n_ops=len(ops),
-                            generation=mindex.generation,
-                            ef_build=mindex.ef_build,
-                            sub_batch=mindex.sub_batch,
-                            relink_floor=mindex.relink_floor,
-                            base_fingerprint=base_fingerprint(mindex.base)))
+    with obs.span("wal.flush", seq=seq, n_ops=len(ops)):
+        ckpt.save(delta_dir / f"step_{seq}", step=seq, tree=ops,
+                  metadata=dict(format_version=DELTA_FORMAT_VERSION,
+                                kind=SEGMENT_KIND, n_ops=len(ops),
+                                generation=mindex.generation,
+                                ef_build=mindex.ef_build,
+                                sub_batch=mindex.sub_batch,
+                                relink_floor=mindex.relink_floor,
+                                base_fingerprint=base_fingerprint(mindex.base)))
+    obs.default_registry().counter("streaming.wal_flushes").inc()
+    obs.default_registry().counter("streaming.wal_ops_flushed").inc(len(ops))
     mindex._wal.clear()
     mindex._delta_seq = seq + 1
     mindex._delta_path = path

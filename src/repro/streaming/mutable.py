@@ -46,6 +46,7 @@ from repro.core import graph as graph_mod
 from repro.core import search as search_mod
 from repro.index import Index, SearchParams
 from repro.index.types import SearchResult
+from repro.obs import default_registry
 
 BIG = 3.0e38
 
@@ -277,6 +278,8 @@ class MutableIndex:
                 self._append_batch(vectors[s : s + self.sub_batch])
             self.stats.rows_appended += len(vectors)
             self.stats.append_s += time.perf_counter() - t0
+            default_registry().counter("streaming.append_rows") \
+                .inc(len(vectors))
             self._bump()
         return ids
 
@@ -361,6 +364,8 @@ class MutableIndex:
             self._pending_repair.extend(int(i) for i in fresh)
             self.stats.rows_deleted += len(fresh)
             if len(fresh):
+                default_registry().counter("streaming.tombstone_flips") \
+                    .inc(len(fresh))
                 self._bump()
         return len(fresh)
 
@@ -428,6 +433,8 @@ class MutableIndex:
                                                  len(affected))))
         self.stats.repairs_drained += len(dead_ids)
         self.stats.repair_s += time.perf_counter() - t0
+        default_registry().counter("streaming.repairs_drained") \
+            .inc(len(dead_ids))
         self._bump()
         return len(dead_ids)
 

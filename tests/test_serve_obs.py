@@ -1,0 +1,131 @@
+"""Serving-path observability: a live server under tracing must produce, for
+every request, a complete ordered stage timeline whose durations sum to the
+reported ``total_ms`` — the acceptance criterion of the observability PR (5%
+tolerance; in practice the sum is exact by construction, because ``total_ms``
+is stamped at the end of the traced resolve stage).
+
+Also covers: serve counters landing in the per-server registry, library-level
+search counters landing in the default registry, and hot-swap install spans.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.serve import ServeConfig, Server
+from repro.streaming import MutableIndex
+
+K = 10
+
+
+@pytest.fixture()
+def traced():
+    """Fresh process-wide tracer state around each test (the tracer is a
+    module global shared with launch/serve.py)."""
+    obs.enable_tracing(capacity=65536)
+    obs.tracer.clear()
+    yield obs.tracer
+    obs.disable_tracing()
+    obs.tracer.clear()
+
+
+def test_request_timeline_sums_to_total_ms(unit_db, unit_index, traced):
+    cfg = ServeConfig(ef_buckets=(16, 32), batch_buckets=(1, 4, 8), k_max=K,
+                      slo_ms=5000.0)
+    with Server(unit_index, cfg) as srv:
+        futs = [srv.submit(unit_db.queries[i % len(unit_db.queries)],
+                           k=K, ef=16 if i % 2 else 32, deadline_ms=5000.0)
+                for i in range(40)]
+        resps = [f.result(timeout=60) for f in futs]
+        summary = srv.metrics.summary()
+        snap = srv.metrics.registry.snapshot()
+
+    by_req = {}
+    for s in traced.spans():
+        if s.req is not None and s.name in obs.SERVE_STAGES:
+            by_req.setdefault(s.req, []).append(s)
+
+    assert all(r.status == "ok" for r in resps)
+    n_checked = 0
+    for r in resps:
+        spans = by_req.get(r.id)
+        assert spans, f"request {r.id} has no stage spans"
+        tl = traced.request_timeline(r.id)
+        stages = [row["stage"] for row in tl if row["stage"] in
+                  obs.SERVE_STAGES]
+        # complete, ordered lifecycle: queue_wait ... resolve
+        assert stages == list(obs.SERVE_STAGES), (r.id, stages)
+        stage_sum_ms = sum(row["dur_ms"] for row in tl
+                           if row["stage"] in obs.SERVE_STAGES)
+        # the acceptance criterion: stage durations sum to total_ms within 5%
+        assert stage_sum_ms == pytest.approx(r.total_ms, rel=0.05), \
+            (r.id, stage_sum_ms, r.total_ms)
+        n_checked += 1
+    assert n_checked == 40
+
+    # façade summary carries the per-stage percentiles the bench row reports
+    assert set(summary["stages"]) == {"queue", "exec", "resolve"}
+    # serve counters landed in the private registry...
+    assert snap["serve.requests"]["value"] == 40
+    assert snap["serve.latency_ms"]["count"] == 40
+    # ...and the local-search instrumentation fed the default registry
+    assert obs.default_registry().counter("search.queries").value > 0
+    assert obs.default_registry().counter("search.hops").value > 0
+
+
+def test_stage_spans_share_batch_boundaries(unit_db, unit_index, traced):
+    """Requests co-batched into one device execution share the same traced
+    device_exec window — the per-request spans are views of batch-level
+    timestamps, not per-request clock reads."""
+    cfg = ServeConfig(ef_buckets=(32,), batch_buckets=(8,), k_max=K,
+                      slo_ms=5000.0)
+    with Server(unit_index, cfg) as srv:
+        futs = [srv.submit(unit_db.queries[i], k=K, ef=32, deadline_ms=5000.0)
+                for i in range(8)]
+        [f.result(timeout=60) for f in futs]
+    execs = [s for s in traced.spans() if s.name == "device_exec"]
+    assert execs
+    windows = {(s.t0_ns, s.dur_ns) for s in execs}
+    # far fewer distinct exec windows than requests: batching is visible
+    assert len(windows) < len(execs)
+    by_window = {}
+    for s in execs:
+        by_window.setdefault((s.t0_ns, s.dur_ns), []).append(s.req)
+    assert any(len(reqs) > 1 for reqs in by_window.values())
+
+
+def test_swap_install_span_and_counters(unit_db, unit_index, traced):
+    cfg = ServeConfig(ef_buckets=(32,), batch_buckets=(1, 4), k_max=K,
+                      slo_ms=5000.0, swap_poll_s=0.05)
+    mi = MutableIndex(unit_index, ef_build=32, sub_batch=64)
+    rng = np.random.default_rng(0)
+    with Server(mi, cfg) as srv:
+        f = srv.submit(unit_db.queries[0], k=K, ef=32, deadline_ms=5000.0)
+        assert f.result(timeout=60).status == "ok"
+        mi.append(rng.standard_normal((4, unit_db.dim)).astype(np.float32))
+        deadline = threading.Event()
+        for _ in range(100):
+            if any(s.name == "swap.install" for s in traced.spans()):
+                break
+            deadline.wait(0.1)
+        snap = srv.metrics.registry.snapshot()
+    installs = [s for s in traced.spans() if s.name == "swap.install"]
+    assert installs, "no swap.install span after an append"
+    assert all(s.attrs and "generation" in s.attrs for s in installs)
+    assert snap["serve.swap.installs"]["value"] >= 1
+
+
+def test_disabled_tracing_serves_identically(unit_db, unit_index):
+    """With the process tracer disabled (the default), serving works and no
+    spans accumulate — the hot path stays dark."""
+    obs.disable_tracing()
+    obs.tracer.clear()
+    cfg = ServeConfig(ef_buckets=(32,), batch_buckets=(1, 4), k_max=K,
+                      slo_ms=5000.0)
+    with Server(unit_index, cfg) as srv:
+        futs = [srv.submit(unit_db.queries[i], k=K, ef=32, deadline_ms=5000.0)
+                for i in range(8)]
+        resps = [f.result(timeout=60) for f in futs]
+    assert all(r.status == "ok" for r in resps)
+    assert obs.tracer.spans() == []
